@@ -1,0 +1,27 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def save(name: str, payload) -> None:
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

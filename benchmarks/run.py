@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME]]``
+prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts to
+``benchmarks/artifacts/``.
+
+Sections -> paper artifacts:
+  mutexbench   Fig. 1a/1b  (thread sweep, maximal contention + random NCS)
+  atomics      Fig. 2      (lock-striped std::atomic<struct>)
+  kvstore      Fig. 3      (LevelDB readrandom analogue, read-only CS)
+  coherence    Table 1     (invalidations / misses per episode)
+  fairness     Table 2/§9  (palindromic cycle, 2x bound, §9.4 mitigation)
+  residency    App. C      (Jensen/decay model)
+  scheduler    (beyond-paper) reciprocating continuous-batching admission
+  kernels      (beyond-paper) serpentine DMA savings
+  roofline     §Roofline   (dry-run artifact aggregation)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (atomics_bench, coherence_bench, fairness_bench,
+                            kernel_bench, kvstore_bench, mutexbench,
+                            residency_bench, roofline, scheduler_bench)
+    sections = {
+        "coherence": coherence_bench.main,
+        "fairness": fairness_bench.main,
+        "residency": residency_bench.main,
+        "kernels": kernel_bench.main,
+        "scheduler": scheduler_bench.main,
+        "kvstore": kvstore_bench.main,
+        "atomics": atomics_bench.main,
+        "mutexbench": mutexbench.main,
+        "roofline": roofline.main,
+    }
+    chosen = ([s for s in args.only.split(",") if s] if args.only
+              else list(sections))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        print(f"# === {name} ===", flush=True)
+        sections[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Lock playground: compare every algorithm on the coherence machine and
+watch the paper's phenomena appear.
+
+Run:  PYTHONPATH=src python examples/lock_playground.py [--threads 16]
+"""
+import argparse
+
+from repro.core.sim.api import bench_lock
+from repro.core.sim.machine import CostModel
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threads", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=20_000)
+    args = ap.parse_args()
+
+    print(f"{'algorithm':<15s} {'thr/kcyc':>9s} {'miss/ep':>8s} "
+          f"{'remote/ep':>9s} {'latency':>8s} {'unfair':>7s}")
+    for alg in ("reciprocating", "retrograde", "mcs", "clh", "hemlock",
+                "ticket", "anderson", "ttas"):
+        r = bench_lock(alg, args.threads, n_steps=args.steps,
+                       cost=CostModel(n_nodes=2), n_replicas=2)
+        print(f"{alg:<15s} {r.throughput:>9.3f} {r.miss_per_episode:>8.2f} "
+              f"{r.remote_per_episode:>9.2f} {r.latency:>8.0f} "
+              f"{r.unfairness:>7.2f}")
+    print("\nExpect: reciprocating leads throughput with ~4 misses/episode;"
+          "\nticket/ttas collapse (global spinning); unfairness ~2x for the"
+          "\nreciprocating family (paper §9.2), ~1x for FIFO locks.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end training driver: train a reduced granite-3-2b for a few
+hundred steps on CPU with the full substrate — multi-threaded data
+pipeline (Reciprocating-locked), AdamW, remat scan, async checkpoints,
+restart-from-checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import shutil
+
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import DataConfig
+from repro.sharding.ctx import trivial_ctx
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import RunConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    cfg = smoke_config(get_config("granite-3-2b")).replace(
+        n_layers=4, d_model=256, d_ff=512, vocab_size=512)
+    ctx = trivial_ctx()
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=8)
+
+    oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=2000,
+                   master_fp32=True)
+    out = train(cfg, ctx, RunConfig(steps=args.steps, ckpt_dir=args.ckpt,
+                                    ckpt_every=100, log_every=20),
+                data_cfg=data, oc=oc)
+    first = out["losses"][0]
+    print(f"[train_lm] loss {first:.3f} -> {out['final_loss']:.3f} over "
+          f"{args.steps} steps "
+          f"({'LEARNING' if out['final_loss'] < first - 0.1 else 'check!'})")
+
+    # restart demo: resume from the checkpoint for a few more steps
+    out2 = train(cfg, ctx, RunConfig(steps=args.steps + 20,
+                                     ckpt_dir=args.ckpt, ckpt_every=1000,
+                                     log_every=20), data_cfg=data, oc=oc)
+    print(f"[train_lm] resumed to step {args.steps + 20}; final loss "
+          f"{out2['final_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

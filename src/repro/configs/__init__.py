@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` resolves through ``get_config``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, shape_applicable, smoke_config,
+)
+
+_ARCH_MODULES = {
+    "whisper-large-v3":      "repro.configs.whisper_large_v3",
+    "mixtral-8x7b":          "repro.configs.mixtral_8x7b",
+    "deepseek-v2-236b":      "repro.configs.deepseek_v2_236b",
+    "minitron-4b":           "repro.configs.minitron_4b",
+    "granite-3-2b":          "repro.configs.granite_3_2b",
+    "starcoder2-3b":         "repro.configs.starcoder2_3b",
+    "starcoder2-7b":         "repro.configs.starcoder2_7b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "zamba2-2.7b":           "repro.configs.zamba2_2_7b",
+    "mamba2-130m":           "repro.configs.mamba2_130m",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "ARCHS",
+    "get_config", "all_configs", "shape_applicable", "smoke_config",
+]

@@ -1,0 +1,174 @@
+"""Unified model configuration for the architecture zoo.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The config is
+the single source of truth used by:
+
+* ``repro.models``      — parameter specs + forward pass
+* ``repro.sharding``    — logical-axis -> mesh-axis rules
+* ``repro.launch``      — input_specs / dryrun / train / serve
+
+Shapes follow the assignment sheet verbatim (see DESIGN.md §5 for skips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # ---- identity -------------------------------------------------------
+    name: str = "model"
+    family: str = "dense"            # dense|moe|encdec|ssm|hybrid|vlm|audio
+    # ---- trunk ----------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    mlp_type: str = "swiglu"         # swiglu|gelu|none
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    # ---- attention ------------------------------------------------------
+    attention: str = "gqa"           # gqa|mla|none
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0          # 0 -> full attention
+    # ---- MLA (deepseek-v2) ----------------------------------------------
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # ---- MoE -------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0                # expert intermediate size (routed)
+    first_dense_layers: int = 0      # leading dense layers (deepseek-v2: 1)
+    first_dense_d_ff: int = 0
+    # ---- SSM (mamba2 SSD) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256             # SSD chunk length
+    # ---- hybrid (zamba2) ---------------------------------------------------
+    shared_attn_every: int = 0       # shared attention block cadence (0 = off)
+    # ---- encoder-decoder (whisper) ----------------------------------------
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_frames: int = 1500           # stub audio frontend output length
+    # ---- vlm stub ---------------------------------------------------------
+    n_patches: int = 0               # stub vision frontend patches (prefix)
+    # ---- numerics / training ----------------------------------------------
+    remat: bool = True
+    scan_layers: bool = True
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 so embed/unembed shard over any mesh."""
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:        # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.attention == "none" and self.shared_attn_every == 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when decode at 500k+ context is sub-quadratic / O(window)."""
+        return (
+            self.family in ("ssm", "hybrid")
+            or self.sliding_window > 0
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + trunk), for 6ND roofline."""
+        from repro.models.model import count_params  # lazy, avoids cycle
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_active_params
+        return count_active_params(self)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to every LM-family architecture (the 4 shapes).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train|prefill|decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; reason if skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode is O(seq^2); skipped per DESIGN.md §5"
+    return True, ""
+
+
+# Reduced configs for CPU smoke tests: same family/topology, tiny dims.
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    kw: dict[str, Any] = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
+        head_dim=32 if cfg.head_dim else 0,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        enc_frames=32,
+        n_patches=min(cfg.n_patches, 8),
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        scan_layers=cfg.scan_layers,
+    )
+    if cfg.attention == "mla":
+        kw.update(kv_lora_rank=32, q_lora_rank=48, qk_nope_dim=32,
+                  qk_rope_dim=16, v_head_dim=32, head_dim=0)
+    if cfg.n_experts:
+        kw.update(n_experts=min(cfg.n_experts, 8), top_k=min(cfg.top_k, 2),
+                  n_shared_experts=min(cfg.n_shared_experts, 1),
+                  moe_d_ff=128,
+                  first_dense_layers=min(cfg.first_dense_layers, 1),
+                  first_dense_d_ff=256 if cfg.first_dense_d_ff else 0)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=32)
+    if cfg.shared_attn_every:
+        kw.update(shared_attn_every=2)
+    if cfg.is_encoder_decoder:
+        kw.update(n_enc_layers=2)
+    return cfg.replace(**kw)

@@ -1,0 +1,31 @@
+"""deepseek-v2-236b [moe] — MLA (kv_lora=512), 2 shared + 160 routed top-6.
+
+60L d_model=5120 128H d_ff=1536(expert) vocab=102400, MoE 160e top-6.
+[arXiv:2405.04434; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,           # MLA: logical kv heads == heads (cache is latent)
+    d_ff=12288,               # dense layer-0 FFN width
+    vocab_size=102400,
+    mlp_type="swiglu",
+    attention="mla",
+    rope_theta=10_000.0,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    n_experts=160,
+    top_k=6,
+    n_shared_experts=2,
+    moe_d_ff=1536,
+    first_dense_layers=1,
+    first_dense_d_ff=12288,
+)

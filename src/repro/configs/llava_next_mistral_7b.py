@@ -1,0 +1,24 @@
+"""llava-next-mistral-7b [vlm] — mistral-7b backbone, anyres tiling stub.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+The vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings that are spliced in as a prefix to the token stream.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    mlp_type="swiglu",
+    attention="gqa",
+    rope_theta=1e6,
+    n_patches=2880,           # anyres: up to 5 tiles x 576 patches
+)

@@ -1,0 +1,25 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, MoE 8e top-2, SWA.
+[arXiv:2401.04088; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,               # kept for reference; experts use moe_d_ff
+    vocab_size=32000,
+    mlp_type="swiglu",
+    attention="gqa",
+    rope_theta=1e6,
+    sliding_window=4096,      # SWA -> long_500k decode is O(window)
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=14336,
+)

@@ -1,0 +1,23 @@
+"""whisper-large-v3 [audio] — enc-dec transformer backbone, conv frontend stub.
+
+32L d_model=1280 20H (kv=20, i.e. MHA) d_ff=5120 vocab=51866.
+[arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,              # decoder layers
+    n_enc_layers=32,          # encoder layers
+    is_encoder_decoder=True,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    mlp_type="gelu",
+    attention="gqa",
+    rope_theta=0.0,           # whisper uses learned/sinusoidal pos, not rope
+    enc_frames=1500,          # 30s audio -> 1500 frames (conv frontend stub)
+)

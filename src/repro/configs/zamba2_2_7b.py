@@ -1,0 +1,27 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+54L d_model=2560 32H (kv=32) d_ff=10240 vocab=32000, ssm_state=64.
+A single *shared* attention+MLP block (one weight set) is applied every 6
+mamba blocks (Zamba2's shared-block design).
+[arXiv:2411.15242; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,              # mamba2 blocks
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,               # shared block MLP width
+    vocab_size=32000,
+    mlp_type="swiglu",
+    attention="gqa",          # attention type of the shared block
+    rope_theta=10_000.0,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    shared_attn_every=6,
+)

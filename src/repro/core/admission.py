@@ -1,0 +1,118 @@
+"""Admission policies — the paper's segment discipline as a scheduler
+primitive.
+
+A lock admission schedule *is* a scheduler (DESIGN.md §L3). This module
+factors the paper's arrival-stack / entry-segment mechanism into a queue
+abstraction shared by the serving engine:
+
+* ``ReciprocatingQueue`` — O(1) push onto an arrival stack; when the entry
+  segment drains, *detach-all* turns the arrival stack into the next entry
+  segment. LIFO within a segment, FIFO across segments => thread-specific
+  bounded bypass (no starvation), and recently-arrived items are served
+  while their cached state is still warm (App. C residency argument).
+* ``mitigated`` mode (paper §9.4): serve the entry segment in random order
+  *without replacement* — statistically fair long-term, still
+  segment-bounded, same aggregate residency benefit.
+* ``FifoQueue`` / ``LifoQueue`` baselines (LIFO = unbounded bypass,
+  starvation-prone — the foil).
+"""
+from __future__ import annotations
+
+import random
+from collections import deque
+from typing import Any, Optional
+
+
+class AdmissionQueue:
+    name = "abstract"
+
+    def push(self, item) -> None:
+        raise NotImplementedError
+
+    def pop(self) -> Optional[Any]:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class FifoQueue(AdmissionQueue):
+    name = "fifo"
+
+    def __init__(self, seed: int = 0):
+        self._q = deque()
+
+    def push(self, item):
+        self._q.append(item)
+
+    def pop(self):
+        return self._q.popleft() if self._q else None
+
+    def __len__(self):
+        return len(self._q)
+
+
+class LifoQueue(AdmissionQueue):
+    name = "lifo"
+
+    def __init__(self, seed: int = 0):
+        self._q = []
+
+    def push(self, item):
+        self._q.append(item)
+
+    def pop(self):
+        return self._q.pop() if self._q else None
+
+    def __len__(self):
+        return len(self._q)
+
+
+class ReciprocatingQueue(AdmissionQueue):
+    """The paper's discipline. ``mitigate`` enables §9.4 randomized
+    intra-segment order (fairness mitigation, bypass bound preserved)."""
+    name = "reciprocating"
+
+    def __init__(self, seed: int = 0, mitigate: bool = False):
+        self._arrivals: list = []       # stack (push = the paper's XCHG)
+        self._entry: list = []          # detached segment, served from end
+        self._rng = random.Random(seed)
+        self._mitigate = mitigate
+        if mitigate:
+            self.name = "reciprocating_mitigated"
+
+    def push(self, item):
+        self._arrivals.append(item)
+
+    def pop(self):
+        if not self._entry:
+            if not self._arrivals:
+                return None
+            # detach-all: arrivals become the next entry segment
+            self._entry = self._arrivals
+            self._arrivals = []
+        if self._mitigate:
+            i = self._rng.randrange(len(self._entry))
+            self._entry[i], self._entry[-1] = self._entry[-1], self._entry[i]
+        return self._entry.pop()        # LIFO within the segment
+
+    def __len__(self):
+        return len(self._arrivals) + len(self._entry)
+
+
+POLICIES = {
+    "fifo": FifoQueue,
+    "lifo": LifoQueue,
+    "reciprocating": ReciprocatingQueue,
+    "reciprocating_mitigated": lambda seed=0: ReciprocatingQueue(
+        seed, mitigate=True),
+}
+
+
+def max_bypass_bound(policy: str, population: int) -> float:
+    """Worst-case number of times a later arrival can overtake a waiter."""
+    if policy == "fifo":
+        return 0
+    if policy.startswith("reciprocating"):
+        return 1                         # paper §2: thread-specific bound
+    return float("inf")                  # lifo: unbounded

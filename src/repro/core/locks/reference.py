@@ -1,0 +1,410 @@
+"""Reference (oracle) implementations of every lock algorithm.
+
+Each algorithm is written as *generator coroutines*: ``acquire(t)`` /
+``release(t, ctx)`` yield atomic memory operations against cells owned by an
+interleaving scheduler (``repro.core.sim.interleave``). A yielded op executes
+atomically; interleaving happens exactly at yield points, which models a
+sequentially-consistent shared memory. These references are:
+
+* the correctness oracle for the vectorized JAX machine (`core/sim`),
+* the subject of the hypothesis property tests (mutual exclusion, bounded
+  bypass, FIFO-ness, palindromic schedules — paper Table 2),
+* line-by-line faithful to the paper's listings (Listing 1 = Reciprocating,
+  Listing 7 = Retrograde Ticket, Listing 8 = Gated; plus the MCS / CLH /
+  HemLock / Ticket / TAS / TTAS / Anderson baselines it compares against).
+
+Pointer model: per-thread singleton wait elements are identified by
+``t + 2`` so that 0 can encode nullptr and 1 can encode LOCKEDEMPTY,
+mirroring the paper's low-bit tagging.
+"""
+from __future__ import annotations
+
+NULL = 0
+LOCKEDEMPTY = 1
+
+
+def eid(t: int) -> int:
+    """Wait-element id of thread t (>= 2; 0/1 reserved)."""
+    return t + 2
+
+
+def tid(e: int) -> int:
+    return e - 2
+
+
+class Cell:
+    """One shared-memory word (its own cache line; paper aligns to 128B)."""
+    __slots__ = ("name", "v")
+
+    def __init__(self, name: str, v: int = 0):
+        self.name, self.v = name, v
+
+    def __repr__(self):
+        return f"<{self.name}={self.v}>"
+
+
+class LockAlgorithm:
+    """Base: subclasses define acquire/release generators."""
+    name = "abstract"
+    fifo = False              # strict FIFO admission?
+    bounded_bypass = None     # max times a later arrival may overtake, or None
+
+    def __init__(self, n_threads: int):
+        self.n = n_threads
+
+    def acquire(self, t: int):
+        raise NotImplementedError
+
+    def release(self, t: int, ctx):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Reciprocating Locks — paper Listing 1
+# ---------------------------------------------------------------------------
+class ReciprocatingLock(LockAlgorithm):
+    name = "reciprocating"
+    fifo = False
+    bounded_bypass = 1        # a later arrival can overtake at most once
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.arrivals = Cell("Arrivals", NULL)
+        self.gate = [Cell(f"Gate[{t}]", NULL) for t in range(n)]
+
+    def acquire(self, t):
+        E = eid(t)
+        yield ("store", self.gate[t], NULL)              # L17: E.Gate = null
+        tail = yield ("xchg", self.arrivals, E, "arrive")   # L20: push
+        assert tail != E
+        succ, eos = NULL, E                              # L18-19 fast path
+        if tail != NULL:                                 # L22: contention
+            succ = NULL if tail == LOCKEDEMPTY else tail  # L25: coerce
+            assert succ != E
+            while True:                                  # L28-32: local spin
+                eos = yield ("load", self.gate[t])
+                if eos != NULL:
+                    break
+            assert eos != E
+            if succ == eos:                              # L36: terminus?
+                succ = NULL                              # L37: quash
+                eos = LOCKEDEMPTY                        # L39
+        return succ, eos                                 # context -> release
+
+    def release(self, t, ctx):
+        succ, eos = ctx
+        if succ != NULL:                                 # L53: entry segment
+            # L58: enable successor, propagate eos identity
+            yield ("store", self.gate[tid(succ)], eos)
+            return
+        # L64-66: entry+arrivals presumed empty; try uncontended unlock
+        assert eos in (LOCKEDEMPTY, eid(t))
+        _, ok = yield ("cas", self.arrivals, eos, NULL)
+        if ok:
+            return
+        # L73: new arrivals exist: detach them -> next entry segment
+        w = yield ("xchg", self.arrivals, LOCKEDEMPTY)
+        assert w not in (NULL, LOCKEDEMPTY, eid(t))
+        yield ("store", self.gate[tid(w)], eos)          # L76
+
+
+# ---------------------------------------------------------------------------
+# Reciprocating — "Gated" formulation (paper Listing 8, Appendix H)
+# ---------------------------------------------------------------------------
+class ReciprocatingGated(LockAlgorithm):
+    name = "reciprocating_gated"
+    fifo = False
+    bounded_bypass = 1
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.tail = Cell("Tail", NULL)
+        self.leader_gate = Cell("LeaderGate", 0)
+        self.eos = [Cell(f"eos[{t}]", NULL) for t in range(n)]
+
+    def acquire(self, t):
+        E = eid(t)
+        yield ("store", self.eos[t], NULL)
+        prv = yield ("xchg", self.tail, E, "arrive")
+        if prv != NULL:
+            while True:                                  # follower: wait eos
+                e = yield ("load", self.eos[t])
+                if e != NULL:
+                    break
+            return ("follower", prv, e)
+        # leader: wait for previous generation to drain (1v1)
+        while True:
+            g = yield ("load", self.leader_gate)
+            if g == 0:
+                break
+        yield ("store", self.leader_gate, 1)
+        return ("leader", NULL, NULL)
+
+    def release(self, t, ctx):
+        role, prv, e = ctx
+        if role == "follower":
+            if e != prv:
+                # systolic relay through the detached segment
+                yield ("store", self.eos[tid(prv)], e)
+            else:
+                yield ("store", self.leader_gate, 0)     # terminus: reopen
+            return
+        detached = yield ("xchg", self.tail, NULL)
+        assert detached != NULL
+        if detached != eid(t):
+            # zombie: pass &E through the chain as end-of-segment marker
+            yield ("store", self.eos[tid(detached)], eid(t))
+        else:
+            yield ("store", self.leader_gate, 0)
+
+
+# ---------------------------------------------------------------------------
+# Ticket lock + Retrograde Ticket (paper Listing 7, Appendix G)
+# ---------------------------------------------------------------------------
+class TicketLock(LockAlgorithm):
+    name = "ticket"
+    fifo = True
+    bounded_bypass = 0
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.ticket = Cell("Ticket", 0)
+        self.grant = Cell("Grant", 0)
+
+    def acquire(self, t):
+        my = yield ("faa", self.ticket, 1, "arrive")
+        while True:
+            g = yield ("load", self.grant)
+            if g == my:
+                break
+        return my
+
+    def release(self, t, ctx):
+        g = yield ("load", self.grant)
+        yield ("store", self.grant, g + 1)
+
+
+class RetrogradeTicketLock(LockAlgorithm):
+    """Mimics Reciprocating admission order with ticket machinery.
+
+    Invariant: Ticket >= Top >= Grant >= Base; tickets in [Base, Top) are the
+    entry segment, granted in DESCENDING order; [Top, Ticket) is the arrival
+    segment. Top/Base are protected by the lock itself."""
+    name = "retrograde"
+    fifo = False
+    bounded_bypass = 1
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.ticket = Cell("Ticket", 0)
+        self.grant = Cell("Grant", 0)
+        self.top = Cell("Top", 0)
+        self.base = Cell("Base", 0)
+
+    def acquire(self, t):
+        my = yield ("faa", self.ticket, 1, "arrive")
+        while True:
+            g = yield ("load", self.grant)
+            if g == my:
+                break
+        return my
+
+    def release(self, t, ctx):
+        g = (yield ("load", self.grant)) - 1
+        base = yield ("load", self.base)
+        if g > base:                       # descend through entry segment
+            yield ("store", self.grant, g)
+            return
+        hi = yield ("load", self.top)
+        yield ("store", self.base, hi)
+        tmp = yield ("load", self.ticket)
+        yield ("store", self.top, tmp - 1)
+        if tmp == hi + 1:                  # no waiters: unlock
+            yield ("store", self.top, tmp)
+            yield ("store", self.base, tmp)
+            yield ("store", self.grant, tmp)
+        else:                              # new entry segment, stay locked
+            yield ("store", self.grant, tmp - 1)
+
+
+# ---------------------------------------------------------------------------
+# MCS
+# ---------------------------------------------------------------------------
+class MCSLock(LockAlgorithm):
+    name = "mcs"
+    fifo = True
+    bounded_bypass = 0
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.tail = Cell("tail", NULL)
+        self.next = [Cell(f"next[{t}]", NULL) for t in range(n)]
+        self.locked = [Cell(f"locked[{t}]", 0) for t in range(n)]
+
+    def acquire(self, t):
+        yield ("store", self.next[t], NULL)
+        yield ("store", self.locked[t], 1)
+        pred = yield ("xchg", self.tail, eid(t), "arrive")
+        if pred != NULL:
+            yield ("store", self.next[tid(pred)], eid(t))
+            while True:
+                v = yield ("load", self.locked[t])
+                if v == 0:
+                    break
+        return None
+
+    def release(self, t, ctx):
+        nxt = yield ("load", self.next[t])
+        if nxt == NULL:
+            _, ok = yield ("cas", self.tail, eid(t), NULL)
+            if ok:
+                return
+            while True:                      # wait for the linker
+                nxt = yield ("load", self.next[t])
+                if nxt != NULL:
+                    break
+        yield ("store", self.locked[tid(nxt)], 0)
+
+
+# ---------------------------------------------------------------------------
+# CLH (Scott Fig. 4.14 standard-interface variant: head field in the lock)
+# ---------------------------------------------------------------------------
+class CLHLock(LockAlgorithm):
+    name = "clh"
+    fifo = True
+    bounded_bypass = 0
+
+    def __init__(self, n):
+        super().__init__(n)
+        # n+1 circulating nodes; node n is the initial dummy (flag=0)
+        self.flag = [Cell(f"flag[{i}]", 0) for i in range(n + 1)]
+        self.tail = Cell("tail", n)          # holds a node INDEX
+        self.head = Cell("head", 0)          # owner's node (context passing)
+        self.node_of = list(range(n))        # thread -> owned node index
+
+    def acquire(self, t):
+        node = self.node_of[t]
+        yield ("store", self.flag[node], 1)
+        pred = yield ("xchg", self.tail, node, "arrive")
+        while True:
+            v = yield ("load", self.flag[pred])
+            if v == 0:
+                break
+        yield ("store", self.head, node)
+        self.node_of[t] = pred               # adopt predecessor's node
+        return None
+
+    def release(self, t, ctx):
+        node = yield ("load", self.head)
+        yield ("store", self.flag[node], 0)
+
+
+# ---------------------------------------------------------------------------
+# HemLock (with one grant word per thread; address-based transfer)
+# ---------------------------------------------------------------------------
+class HemLock(LockAlgorithm):
+    name = "hemlock"
+    fifo = True
+    bounded_bypass = 0
+    LOCK_ID = 7            # stands for the lock's address
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.tail = Cell("tail", NULL)
+        self.grant = [Cell(f"grant[{t}]", 0) for t in range(n)]
+
+    def acquire(self, t):
+        pred = yield ("xchg", self.tail, eid(t), "arrive")
+        if pred != NULL:
+            p = tid(pred)
+            while True:                       # wait for lock's address
+                v = yield ("load", self.grant[p])
+                if v == self.LOCK_ID:
+                    break
+            yield ("store", self.grant[p], 0)  # ack: releases pred's element
+        return None
+
+    def release(self, t, ctx):
+        _, ok = yield ("cas", self.tail, eid(t), NULL)
+        if ok:
+            return
+        yield ("store", self.grant[t], self.LOCK_ID)
+        while True:                            # wait for successor's ack
+            v = yield ("load", self.grant[t])
+            if v == 0:
+                break
+
+
+# ---------------------------------------------------------------------------
+# TAS / TTAS / Anderson
+# ---------------------------------------------------------------------------
+class TASLock(LockAlgorithm):
+    name = "tas"
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.word = Cell("lock", 0)
+
+    def acquire(self, t):
+        yield ("arrive",)
+        while True:
+            v = yield ("xchg", self.word, 1)
+            if v == 0:
+                return None
+
+    def release(self, t, ctx):
+        yield ("store", self.word, 0)
+
+
+class TTASLock(LockAlgorithm):
+    name = "ttas"
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.word = Cell("lock", 0)
+
+    def acquire(self, t):
+        yield ("arrive",)
+        while True:
+            v = yield ("load", self.word)
+            if v == 0:
+                v = yield ("xchg", self.word, 1)
+                if v == 0:
+                    return None
+
+    def release(self, t, ctx):
+        yield ("store", self.word, 0)
+
+
+class AndersonLock(LockAlgorithm):
+    """Array-based queue lock: T*L space (the paper's space-complexity foil)."""
+    name = "anderson"
+    fifo = True
+    bounded_bypass = 0
+
+    def __init__(self, n):
+        super().__init__(n)
+        self.slots = [Cell(f"slot[{i}]", 1 if i == 0 else 0)
+                      for i in range(n)]
+        self.nxt = Cell("next", 0)
+
+    def acquire(self, t):
+        my = (yield ("faa", self.nxt, 1, "arrive")) % self.n
+        while True:
+            v = yield ("load", self.slots[my])
+            if v == 1:
+                break
+        yield ("store", self.slots[my], 0)
+        return my
+
+    def release(self, t, ctx):
+        yield ("store", self.slots[(ctx + 1) % self.n], 1)
+
+
+ALGORITHMS = {
+    c.name: c for c in (
+        ReciprocatingLock, ReciprocatingGated, TicketLock,
+        RetrogradeTicketLock, MCSLock, CLHLock, HemLock, TASLock, TTASLock,
+        AndersonLock,
+    )
+}

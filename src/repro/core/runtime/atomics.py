@@ -1,0 +1,46 @@
+"""Host-side atomic primitives for the runtime lock ports.
+
+CPython exposes no user-level HW atomics, so ``AtomicRef`` emulates
+``exchange`` / ``compare_exchange`` / ``fetch_add`` with a per-ref internal
+mutex (documented deviation — see DESIGN.md §L1). The *algorithmic
+structure* of the locks built on top (single-word state, segments, zombie
+end-of-segment, bounded bypass) is exactly the paper's; these runtime ports
+synchronize the framework's data pipeline and checkpoint writer for real.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class AtomicRef:
+    """A single shared word with wait-free-style primitives."""
+    __slots__ = ("_v", "_m")
+
+    def __init__(self, value=None):
+        self._v = value
+        self._m = threading.Lock()
+
+    def load(self):
+        return self._v
+
+    def store(self, value) -> None:
+        with self._m:
+            self._v = value
+
+    def exchange(self, value):
+        with self._m:
+            old, self._v = self._v, value
+            return old
+
+    def compare_exchange(self, expect, value) -> bool:
+        with self._m:
+            if self._v is expect or self._v == expect:
+                self._v = value
+                return True
+            return False
+
+    def fetch_add(self, delta: int) -> int:
+        with self._m:
+            old = self._v
+            self._v = old + delta
+            return old

@@ -1,0 +1,102 @@
+"""Reciprocating Lock — host runtime port (paper Listing 1).
+
+Used *for real* by the framework: the multi-threaded data pipeline and the
+async checkpoint writer synchronize with this lock. Structure is
+line-faithful to Listing 1:
+
+* one ``Arrivals`` word; arriving threads push their thread-local wait
+  element with a single exchange (constant-time doorway),
+* ownership relayed through the detached entry segment via ``Gate``,
+  propagating the end-of-segment (possibly *zombie*) element address,
+* constant-time release: Gate store | CAS-to-unlocked | detach-exchange.
+
+Waiting uses an Event per wait element ("polite" waiting — the paper §8
+notes constant-time paths make the algorithm amenable to park/unpark-style
+primitives; ``Event`` is CPython's analogue). One singleton element per
+thread in TLS suffices (a thread waits on at most one lock at a time), and
+the element is reusable across any number of locks — the paper's
+space-complexity point.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.core.runtime.atomics import AtomicRef
+
+_LOCKEDEMPTY = "LOCKEDEMPTY"           # the paper's tagged-1 encoding
+_tls = threading.local()
+
+
+class WaitElement:
+    __slots__ = ("gate", "event")
+
+    def __init__(self):
+        self.gate = None
+        self.event = threading.Event()
+
+    def prepare(self):
+        self.gate = None
+        self.event.clear()
+
+    def open(self, eos) -> None:       # Gate.store(eos) + wake
+        self.gate = eos
+        self.event.set()
+
+    def await_gate(self):
+        self.event.wait()
+        return self.gate
+
+
+def _element() -> WaitElement:
+    e = getattr(_tls, "element", None)
+    if e is None:
+        e = _tls.element = WaitElement()
+    return e
+
+
+class ReciprocatingLock:
+    """Context-manager mutex. Context (succ, eos) is kept per-thread
+    (legacy-interface style — the paper's TLS option)."""
+
+    def __init__(self):
+        self._arrivals = AtomicRef(None)
+        self._ctx = threading.local()
+
+    # -- Acquire (Listing 1 L14-47) ----------------------------------------
+    def acquire(self) -> None:
+        e = _element()
+        e.prepare()                                     # L17
+        tail = self._arrivals.exchange(e)               # L20 push
+        succ, eos = None, e                             # L18-19
+        if tail is not None:                            # L22 contention
+            succ = None if tail is _LOCKEDEMPTY else tail   # L25 coerce
+            eos = e.await_gate()                        # L28-32 wait
+            assert eos is not None
+            if succ is eos:                             # L36 terminus
+                succ = None                             # L37 quash
+                eos = _LOCKEDEMPTY                      # L39
+        self._ctx.succ, self._ctx.eos = succ, eos
+
+    # -- Release (Listing 1 L50-77) ------------------------------------------
+    def release(self) -> None:
+        succ, eos = self._ctx.succ, self._ctx.eos
+        if succ is not None:                            # L53 entry segment
+            succ.open(eos)                              # L58
+            return
+        if self._arrivals.compare_exchange(eos, None):  # L66 fast unlock
+            return
+        w = self._arrivals.exchange(_LOCKEDEMPTY)       # L73 detach
+        assert w is not None and w is not _LOCKEDEMPTY
+        w.open(eos)                                     # L76
+
+    # -- pythonic sugar --------------------------------------------------------
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked_hint(self) -> bool:
+        return self._arrivals.load() is not None

@@ -1,0 +1,70 @@
+"""High-level entry points for the lock-performance simulator.
+
+``bench_lock`` runs the MutexBench workload (paper §7.1) for one algorithm
+at a given thread count and returns the paper's metrics:
+
+* throughput (episodes / Mcycle, aggregated over the ensemble)
+* misses / episode          (Table 1 "Maximum Remote Misses" family)
+* invalidations / episode   (Table 1 "Invalidations per episode")
+* remote misses / episode   (NUMA)
+* mean contended acquire latency (cycles)
+* admission fairness (max/min episodes per thread) and the admission log
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.locks.programs import PROGRAMS
+from repro.core.sim.machine import CostModel, run_machine
+
+
+@dataclass
+class BenchResult:
+    name: str
+    n_threads: int
+    throughput: float          # episodes per kilo-cycle (ensemble mean)
+    episodes: int
+    miss_per_episode: float
+    inval_per_episode: float
+    remote_per_episode: float
+    latency: float             # mean arrive->admit cycles
+    unfairness: float          # max/min episodes per thread
+    admissions: np.ndarray     # (replicas, ADM_LOG) ring of admitted tids
+
+
+def bench_lock(name: str, n_threads: int, *, n_steps: int = 20_000,
+               ncs_max: int = 0, cs_shared: bool = True,
+               cost: CostModel = CostModel(n_nodes=2),
+               n_replicas: int = 4, seed0: int = 0) -> BenchResult:
+    prog = PROGRAMS[name](n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
+
+    @jax.jit
+    def go(seeds):
+        return jax.vmap(lambda s: run_machine(prog, n_threads, n_steps,
+                                              cost, s))(seeds)
+
+    s = go(jnp.arange(seed0, seed0 + n_replicas))
+    eps = np.asarray(s.episodes).sum(axis=1)           # per replica
+    time = np.maximum(np.asarray(s.time), 1)
+    thr = float((eps / time).mean() * 1e3)             # per kcycle
+    total = max(int(eps.sum()), 1)
+    per_thread = np.asarray(s.episodes)
+    lo = np.maximum(per_thread.min(axis=1), 1)
+    return BenchResult(
+        name=name, n_threads=n_threads, throughput=thr,
+        episodes=int(eps.sum()),
+        miss_per_episode=float(np.asarray(s.misses).sum() / total),
+        inval_per_episode=float(np.asarray(s.inval_recv).sum() / total),
+        remote_per_episode=float(np.asarray(s.remote).sum() / total),
+        latency=float(np.asarray(s.lat_sum).sum() / total),
+        unfairness=float((per_thread.max(axis=1) / lo).mean()),
+        admissions=np.asarray(s.adm_log),
+    )
+
+
+def sweep_threads(name: str, thread_counts, **kw):
+    return [bench_lock(name, t, **kw) for t in thread_counts]

@@ -1,0 +1,156 @@
+"""Interleaving scheduler for the reference lock generators.
+
+Drives T threads through ``loop { NCS; acquire; CS; release }`` interleaved
+at atomic-op granularity (sequential consistency). Verifies the mutual-
+exclusion invariant on every CS entry and records a timeline of
+``arrive`` (doorway completion) / ``admit`` (CS entry) events used by the
+fairness, bounded-bypass and palindrome analyses.
+
+Policies:
+* ``random``    — uniformly random thread each step (hypothesis drives the
+                  seed): the property-test scheduler.
+* ``rr``        — deterministic round-robin, one op per thread per round:
+                  the sustained-contention regime of the paper (empty NCS,
+                  threads re-arrive immediately) — reproduces Table 2.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from repro.core.locks.reference import LockAlgorithm
+
+
+class MutualExclusionViolation(AssertionError):
+    pass
+
+
+@dataclass
+class RunResult:
+    admissions: list                     # thread id per CS entry, in order
+    timeline: list                       # ("arrive"|"admit", thread)
+    episodes: dict                       # tid -> completed episodes
+    ops: int
+
+    # -- analyses ----------------------------------------------------------
+    def max_bypass(self) -> int:
+        """Thread-specific bounded bypass: over every waiting window
+        (arrive -> admit of thread t), the max number of admissions by any
+        single OTHER thread that arrived after t. Reciprocating: <= 1."""
+        worst = 0
+        for i, (kind, t) in enumerate(self.timeline):
+            if kind != "arrive":
+                continue
+            arrived_after: set = set()
+            later_adm: dict = {}
+            for kind2, t2 in self.timeline[i + 1:]:
+                if t2 == t:
+                    if kind2 == "admit":
+                        break
+                    continue
+                if kind2 == "arrive":
+                    arrived_after.add(t2)
+                elif kind2 == "admit" and t2 in arrived_after:
+                    later_adm[t2] = later_adm.get(t2, 0) + 1
+            if later_adm:
+                worst = max(worst, max(later_adm.values()))
+        return worst
+
+    def is_fifo(self) -> bool:
+        """Admissions in exact doorway (arrival) order?"""
+        arr, adm = [], []
+        for kind, t in self.timeline:
+            (arr if kind == "arrive" else adm).append(t)
+        return adm == arr[:len(adm)]
+
+    def unfairness(self) -> float:
+        """max/min episodes over threads (paper §9.2: <= 2x for
+        reciprocating under sustained contention)."""
+        eps = [e for e in self.episodes.values()]
+        lo = min(eps)
+        return float("inf") if lo == 0 else max(eps) / lo
+
+    def cycle(self) -> list | None:
+        """Detect a repeating admission cycle in the tail; returns one
+        period (e.g. the Table-2 palindrome A B C D E D C B)."""
+        s = self.admissions
+        n = len(s)
+        for period in range(2, n // 3):
+            tail = s[n - 3 * period:]
+            if tail[:period] == tail[period:2 * period] == tail[2 * period:]:
+                return tail[:period]
+        return None
+
+
+def run(alg: LockAlgorithm, n_threads: int, n_ops: int = 4000,
+        policy: str = "random", seed: int = 0, ncs_ops: int = 0,
+        max_episodes: int | None = None) -> RunResult:
+    rng = random.Random(seed)
+    in_cs: list = []
+    episodes = {t: 0 for t in range(n_threads)}
+    admissions: list = []
+    timeline: list = []
+
+    def thread_body(t: int):
+        while True:
+            for _ in range(ncs_ops):
+                yield ("delay",)
+            ctx = yield from alg.acquire(t)
+            if in_cs:
+                raise MutualExclusionViolation(
+                    f"{alg.name}: thread {t} entered CS while "
+                    f"{in_cs} inside")
+            in_cs.append(t)
+            timeline.append(("admit", t))
+            admissions.append(t)
+            yield ("cs",)
+            in_cs.remove(t)
+            episodes[t] += 1
+            yield from alg.release(t, ctx)
+
+    gens = {t: thread_body(t) for t in range(n_threads)}
+    pending: dict = {t: None for t in range(n_threads)}
+    started: set = set()
+
+    def step_thread(t):
+        g = gens[t]
+        op = g.send(pending[t]) if t in started else next(g)
+        started.add(t)
+        kind = op[0]
+        res = None
+        if kind == "load":
+            res = op[1].v
+        elif kind == "store":
+            op[1].v = op[2]
+        elif kind == "xchg":
+            res, op[1].v = op[1].v, op[2]
+            if op[-1] == "arrive":
+                timeline.append(("arrive", t))
+        elif kind == "faa":
+            res, op[1].v = op[1].v, op[1].v + op[2]
+            if op[-1] == "arrive":
+                timeline.append(("arrive", t))
+        elif kind == "cas":
+            old = op[1].v
+            ok = old == op[2]
+            if ok:
+                op[1].v = op[3]
+            res = (old, ok)
+        elif kind == "arrive":
+            timeline.append(("arrive", t))
+        pending[t] = res
+
+    steps = 0
+    while steps < n_ops:
+        if max_episodes is not None and len(admissions) >= max_episodes:
+            break
+        if policy == "rr":
+            for t in range(n_threads):
+                step_thread(t)
+                steps += 1
+        else:
+            step_thread(rng.randrange(n_threads))
+            steps += 1
+
+    return RunResult(admissions=admissions, timeline=timeline,
+                     episodes=episodes, ops=steps)

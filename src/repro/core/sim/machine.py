@@ -1,0 +1,304 @@
+"""Vectorized cache-coherent shared-memory machine in JAX.
+
+This is the performance substrate on which the lock algorithms are
+evaluated (paper Figures 1-3, Table 1): a sequentially-consistent machine
+with a MESI-lite per-word coherence model and a serialized coherence bus.
+
+Model (DESIGN.md §L1):
+* ``mem[W]``      — one word per cache line (the paper sequesters every
+                    field at 128B, so word == line is faithful).
+* ``owner[W]``    — thread holding the line Modified (-1: none).
+* ``sharers[T,W]``— Shared copies.
+* Loads:  hit (owner==t or sharer) costs 1 cycle and no bus traffic;
+          miss costs C_local / C_remote (NUMA by last-writer's node) and
+          downgrades a remote Modified copy to Shared.
+* Stores/atomics: hit-in-M costs 1; otherwise a miss that *invalidates*
+  all other copies (counted per victim — the paper's l2d_cache_inval).
+* The bus serializes misses (global_time advances only on line transfers);
+  cache hits and local DELAYs only advance the thread's own clock. This is
+  what makes global spinning (Ticket) collapse at high T while local
+  spinning (MCS/CLH/Reciprocating) hands off in O(1) bus transactions.
+* SPIN ops block the thread (zero cost) until the watched word is written
+  — a woken waiter then pays the coherence miss for its re-read, exactly
+  the "local spinning" accounting of the paper.
+
+Lock algorithms are table-driven state machines (``jax.lax.switch`` over a
+per-algorithm handler list — see ``core/locks/programs.py``); the engine is
+a single ``jax.lax.scan`` over micro-steps, ``jax.vmap``-able over replica
+ensembles and jit-compiled end to end.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+F32 = jnp.float32
+INF = jnp.array(2**31 - 1, jnp.int32)
+
+# op kinds
+NOP, LOAD, STORE, XCHG, CAS, FAA, SPIN_EQ, SPIN_NE, DELAY = range(9)
+
+
+class Op(NamedTuple):
+    kind: jnp.ndarray
+    addr: jnp.ndarray
+    a: jnp.ndarray
+    b: jnp.ndarray
+
+
+def op(kind, addr=0, a=0, b=0):
+    return (jnp.asarray(kind, I32), jnp.asarray(addr, I32),
+            jnp.asarray(a, I32), jnp.asarray(b, I32))
+
+
+@dataclass(frozen=True)
+class CostModel:
+    hit: int = 1
+    local_miss: int = 40
+    remote_miss: int = 100
+    n_nodes: int = 1          # NUMA nodes (threads split contiguously)
+
+
+@dataclass(frozen=True)
+class Program:
+    """A lock+workload program: handlers[pc](t, regs, res, rng) ->
+    (regs, next_pc, op4, arrive, admit, rng).
+
+    ``home`` maps each word to the thread on whose NUMA node the line is
+    homed (-1: lock/global words, homed on node 0). The paper's "Maximum
+    Remote Misses" analysis assumes home-based snooping (UPI), so remote-ness
+    is decided by the line's home, not its last writer."""
+    handlers: tuple
+    n_mem: int
+    home: tuple = ()          # per-word home thread (-1 => node 0)
+    name: str = "prog"
+    n_regs: int = 8
+    init_mem: tuple = ()      # ((addr, value), ...) initial memory words
+
+
+class MachineState(NamedTuple):
+    mem: jnp.ndarray          # (W,) i32
+    owner: jnp.ndarray        # (W,) i32
+    sharers: jnp.ndarray      # (T, W) bool
+    last_writer: jnp.ndarray  # (W,) i32
+    pc: jnp.ndarray           # (T,) i32
+    regs: jnp.ndarray         # (T, R) i32
+    cur_op: jnp.ndarray       # (T, 4) i32
+    blocked: jnp.ndarray      # (T,) bool
+    ready_at: jnp.ndarray     # (T,) i32
+    time: jnp.ndarray         # () i32 bus clock
+    rng: jnp.ndarray          # (T,) u32 xorshift state
+    # metrics
+    episodes: jnp.ndarray     # (T,) i32
+    misses: jnp.ndarray       # (T,) i32
+    remote: jnp.ndarray       # (T,) i32
+    inval_recv: jnp.ndarray   # (T,) i32
+    arrive_time: jnp.ndarray  # (T,) i32
+    lat_sum: jnp.ndarray      # (T,) i32
+    adm_log: jnp.ndarray      # (K,) i32
+    adm_cnt: jnp.ndarray      # () i32
+
+
+ADM_LOG = 512
+
+
+def init_state(prog: Program, n_threads: int, seed: int = 0) -> MachineState:
+    T, W, R = n_threads, prog.n_mem, prog.n_regs
+    mem0 = jnp.zeros(W, I32)
+    for a, v in prog.init_mem:
+        mem0 = mem0.at[a].set(v)
+    return MachineState(
+        mem=mem0,
+        owner=jnp.full(W, -1, I32),
+        sharers=jnp.zeros((T, W), bool),
+        last_writer=jnp.full(W, -1, I32),
+        pc=jnp.zeros(T, I32),
+        regs=jnp.zeros((T, R), I32),
+        cur_op=jnp.broadcast_to(jnp.array([NOP, 0, 0, 0], I32), (T, 4)),
+        blocked=jnp.zeros(T, bool),
+        ready_at=jnp.zeros(T, jnp.int32),
+        time=jnp.zeros((), jnp.int32),
+        rng=(jnp.arange(T, dtype=jnp.uint32) * jnp.uint32(2654435761)
+             + jnp.uint32(seed) * jnp.uint32(97) + jnp.uint32(1)),
+        episodes=jnp.zeros(T, I32),
+        misses=jnp.zeros(T, I32),
+        remote=jnp.zeros(T, I32),
+        inval_recv=jnp.zeros(T, I32),
+        arrive_time=jnp.zeros(T, jnp.int32),
+        lat_sum=jnp.zeros(T, jnp.int32),
+        adm_log=jnp.full(ADM_LOG, -1, I32),
+        adm_cnt=jnp.zeros((), I32),
+    )
+
+
+def _node(t, T, n_nodes):
+    return jnp.where(n_nodes <= 1, 0, t // jnp.maximum(T // n_nodes, 1))
+
+
+def machine_step(s: MachineState, prog: Program, cm: CostModel,
+                 n_threads: int):
+    """Execute one micro-op for the earliest-ready unblocked thread."""
+    T = n_threads
+
+    keyed = jnp.where(s.blocked, INF, s.ready_at)
+    t = jnp.argmin(keyed).astype(I32)
+    kind, addr, a, b = (s.cur_op[t, 0], s.cur_op[t, 1], s.cur_op[t, 2],
+                        s.cur_op[t, 3])
+    mval = s.mem[addr]
+
+    is_load = (kind == LOAD) | (kind == SPIN_EQ) | (kind == SPIN_NE)
+    is_store = (kind == STORE) | (kind == XCHG) | (kind == CAS) | (kind == FAA)
+    is_mem = is_load | is_store
+
+    # --- spin semantics: unsatisfied -> block (woken by a write) -----------
+    spin_unsat = ((kind == SPIN_EQ) & (mval != a)) | \
+                 ((kind == SPIN_NE) & (mval == a))
+
+    # --- cache/cost ---------------------------------------------------------
+    hit = (s.owner[addr] == t) | s.sharers[t, addr]
+    my_node = _node(t, T, cm.n_nodes)
+    home_arr = jnp.asarray(prog.home if prog.home else (-1,) * prog.n_mem,
+                           I32)
+    hthread = home_arr[addr]
+    home_node = jnp.where(hthread < 0, 0, _node(jnp.maximum(hthread, 0), T,
+                                                cm.n_nodes))
+    remote = (home_node != my_node) & (cm.n_nodes > 1)
+    miss = is_mem & ~hit
+    cost = jnp.where(~is_mem, 0,
+                     jnp.where(hit & ~is_store, cm.hit,
+                               jnp.where(hit & is_store & (s.owner[addr] == t),
+                                         cm.hit,
+                                         jnp.where(remote, cm.remote_miss,
+                                                   cm.local_miss))))
+    # a store to a merely-Shared line is an upgrade: count as miss-ish
+    upgrade = is_store & s.sharers[t, addr] & (s.owner[addr] != t)
+    miss = miss | upgrade
+
+    # --- memory effect ------------------------------------------------------
+    cas_ok = (kind == CAS) & (mval == a)
+    newval = jnp.where(kind == STORE, a,
+             jnp.where(kind == XCHG, a,
+             jnp.where(kind == FAA, mval + a,
+             jnp.where(cas_ok, b, mval))))
+    writes = is_store & ((kind != CAS) | cas_ok)
+    # failed CAS still takes the line exclusive (x86 semantics)
+    takes_line = is_store
+    res = jnp.where(kind == CAS, mval, jnp.where(is_load, mval, mval))
+    res = jnp.where(kind == XCHG, mval, res)
+    res = jnp.where(kind == FAA, mval, res)
+    cas_flag = jnp.where(cas_ok, 1, 0)
+
+    do_exec = ~spin_unsat
+    eff = do_exec & is_mem
+
+    mem = s.mem.at[addr].set(jnp.where(do_exec & writes, newval, s.mem[addr]))
+
+    # coherence updates
+    sh_col = s.sharers[:, addr]
+    others_sharing = sh_col & (jnp.arange(T) != t)
+    n_inval = jnp.where(do_exec & takes_line,
+                        others_sharing.sum() +
+                        ((s.owner[addr] >= 0) & (s.owner[addr] != t)),
+                        0)
+    inval_recv = s.inval_recv + jnp.where(
+        (do_exec & takes_line),
+        others_sharing.astype(I32) +
+        (jnp.arange(T) == s.owner[addr]) * (s.owner[addr] != t), 0)
+
+    # store: invalidate everyone else, become owner
+    # load miss: downgrade owner to shared, join sharers
+    new_sh_col = jnp.where(do_exec & takes_line,
+                           jnp.arange(T) == t,
+                           jnp.where(eff & is_load,
+                                     sh_col | (jnp.arange(T) == t) |
+                                     (jnp.arange(T) == s.owner[addr]),
+                                     sh_col))
+    sharers = s.sharers.at[:, addr].set(new_sh_col)
+    owner = s.owner.at[addr].set(
+        jnp.where(do_exec & takes_line, t,
+                  jnp.where(eff & is_load & ~hit, -1, s.owner[addr])))
+    last_writer = s.last_writer.at[addr].set(
+        jnp.where(do_exec & writes, t, s.last_writer[addr]))
+
+    # --- timing -------------------------------------------------------------
+    start = jnp.maximum(s.time, s.ready_at[t])
+    # spin first-check also pays its read cost before blocking
+    op_cost = jnp.where(kind == DELAY, a.astype(jnp.int32),
+                        cost.astype(jnp.int32))
+    finish = start + op_cost
+    # bus serializes only on misses (line transfers)
+    time = jnp.where(eff & miss | (spin_unsat & ~hit), finish, s.time)
+    ready_at = s.ready_at.at[t].set(finish)
+    misses_ct = s.misses.at[t].add(
+        jnp.where((eff | spin_unsat) & miss, 1, 0))
+    remote_ct = s.remote.at[t].add(
+        jnp.where((eff | spin_unsat) & miss & remote, 1, 0))
+    # spin's failed probe still cached the line Shared
+    sharers = sharers.at[t, addr].set(
+        jnp.where(spin_unsat, True, sharers[t, addr]))
+
+    # --- wake threads blocked on this word ----------------------------------
+    woke = (do_exec & writes) & s.blocked & (s.cur_op[:, 1] == addr)
+    blocked = jnp.where(woke, False, s.blocked)
+    ready_at = jnp.where(woke, jnp.maximum(ready_at, finish), ready_at)
+    blocked = blocked.at[t].set(spin_unsat)
+
+    # --- transition (only when the op completed) -----------------------------
+    def run_handler(pc_regs_res):
+        pc_v, regs_v, res_v, rng_v = pc_regs_res
+        outs = jax.lax.switch(
+            pc_v, [partial(h, t) for h in prog.handlers], regs_v, res_v,
+            rng_v)
+        return outs   # (regs, next_pc, op4, arrive, admit, rng)
+
+    regs_t, next_pc, next_op, arrive, admit, rng_t = run_handler(
+        (s.pc[t], s.regs[t], jnp.where(kind == CAS,
+                                       mval * 2 + cas_flag, res), s.rng[t]))
+
+    adv = do_exec
+    pc = s.pc.at[t].set(jnp.where(adv, next_pc, s.pc[t]))
+    regs = s.regs.at[t].set(jnp.where(adv, regs_t, s.regs[t]))
+    cur_op = s.cur_op.at[t].set(
+        jnp.where(adv, jnp.stack(next_op), s.cur_op[t]))
+    rng = s.rng.at[t].set(jnp.where(adv, rng_t, s.rng[t]))
+
+    arrive = adv & arrive
+    admit = adv & admit
+    arrive_time = s.arrive_time.at[t].set(
+        jnp.where(arrive, finish, s.arrive_time[t]))
+    lat_sum = s.lat_sum.at[t].add(
+        jnp.where(admit, finish - s.arrive_time[t], 0))
+    episodes = s.episodes.at[t].add(jnp.where(admit, 1, 0))
+    adm_log = s.adm_log.at[s.adm_cnt % ADM_LOG].set(
+        jnp.where(admit, t, s.adm_log[s.adm_cnt % ADM_LOG]))
+    adm_cnt = s.adm_cnt + jnp.where(admit, 1, 0)
+
+    return MachineState(mem, owner, sharers, last_writer, pc, regs, cur_op,
+                        blocked, ready_at, time, rng, episodes, misses_ct,
+                        remote_ct, inval_recv, arrive_time, lat_sum,
+                        adm_log, adm_cnt)
+
+
+def run_machine(prog: Program, n_threads: int, n_steps: int,
+                cm: CostModel = CostModel(), seed: int = 0) -> MachineState:
+    s0 = init_state(prog, n_threads, seed)
+
+    def body(s, _):
+        return machine_step(s, prog, cm, n_threads), None
+
+    s, _ = jax.lax.scan(body, s0, None, length=n_steps)
+    return s
+
+
+def run_ensemble(prog: Program, n_threads: int, n_steps: int,
+                 cm: CostModel = CostModel(), n_replicas: int = 8,
+                 seed0: int = 0):
+    """vmap over independent replicas (different tie-break/NCS seeds)."""
+    f = jax.jit(jax.vmap(lambda seed: run_machine(
+        prog, n_threads, n_steps, cm, seed)), static_argnums=())
+    return f(jnp.arange(seed0, seed0 + n_replicas))

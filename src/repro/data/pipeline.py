@@ -1,0 +1,147 @@
+"""Multi-threaded synthetic-data pipeline, synchronized by Reciprocating
+runtime locks (the paper's algorithm doing real work in its own framework).
+
+Producer threads generate tokenized batches (deterministic per shard+epoch,
+so restarts are reproducible from a cursor); a bounded buffer hands them to
+the training loop. Both the shard cursor and the buffer are guarded by
+``ReciprocatingLock`` — the contended hot path under many loader threads,
+exactly the lock's design point. Pull-based consumption means one slow
+producer never head-of-line-blocks training (straggler isolation).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.runtime.reciprocating import ReciprocatingLock
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int = 1024
+    seq_len: int = 128
+    global_batch: int = 8
+    n_shards: int = 16
+    buffer_size: int = 8
+    n_workers: int = 4
+
+
+class ShardCursor:
+    """Deterministic, restart-able position in the virtual dataset."""
+
+    def __init__(self, n_shards: int):
+        self._lock = ReciprocatingLock()
+        self._next = 0
+        self.n_shards = n_shards
+
+    def claim(self) -> int:
+        with self._lock:
+            idx = self._next
+            self._next += 1
+            return idx
+
+    def state(self) -> int:
+        with self._lock:
+            return self._next
+
+    def restore(self, value: int) -> None:
+        with self._lock:
+            self._next = value
+
+
+class BoundedBuffer:
+    """Reciprocating-locked bounded queue (condition-variable free waits
+    are kept short; the lock's constant-time paths keep handoff cheap)."""
+
+    def __init__(self, capacity: int):
+        self._lock = ReciprocatingLock()
+        self._items: list = []
+        self.capacity = capacity
+        self._closed = False
+
+    def put(self, item, timeout: float = 120.0) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                if self._closed:
+                    return False
+                if len(self._items) < self.capacity:
+                    self._items.append(item)
+                    return True
+            time.sleep(0.001)
+        return False
+
+    def get(self, timeout: float = 120.0):
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                if self._items:
+                    return self._items.pop(0)
+                if self._closed:
+                    return None
+            time.sleep(0.001)
+        return None
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+
+
+def synth_batch(cfg: DataConfig, chunk_id: int) -> dict:
+    """Deterministic synthetic LM batch (restart-reproducible). Tokens
+    follow a noisy affine bigram process (x' = 5x+7 mod V, 10% noise), so
+    a competent model drives CE well below the ln(V) uniform floor —
+    the learnability signal the training tests assert on."""
+    rng = np.random.default_rng(chunk_id * 9973 + 17)
+    B, S, V = cfg.global_batch, cfg.seq_len + 1, cfg.vocab_size
+    toks = np.zeros((B, S), np.int32)
+    toks[:, 0] = rng.integers(0, V, B)
+    noise = rng.random((B, S)) < 0.1
+    rand = rng.integers(0, V, (B, S))
+    for t in range(1, S):
+        nxt = (5 * toks[:, t - 1] + 7) % V
+        toks[:, t] = np.where(noise[:, t], rand[:, t], nxt)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+            "mask": np.ones((cfg.global_batch, cfg.seq_len), np.float32),
+            "chunk_id": chunk_id}
+
+
+class DataPipeline:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.cursor = ShardCursor(cfg.n_shards)
+        self.buffer = BoundedBuffer(cfg.buffer_size)
+        self._threads: list = []
+        self._stop = threading.Event()
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            chunk = self.cursor.claim()
+            batch = synth_batch(self.cfg, chunk)
+            if not self.buffer.put(batch):
+                return
+
+    def start(self) -> "DataPipeline":
+        for _ in range(self.cfg.n_workers):
+            t = threading.Thread(target=self._worker, daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def next_batch(self) -> dict | None:
+        return self.buffer.get()
+
+    def checkpoint_state(self) -> dict:
+        return {"cursor": self.cursor.state()}
+
+    def restore(self, state: dict) -> None:
+        self.cursor.restore(state["cursor"])
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.buffer.close()
+        for t in self._threads:
+            t.join(timeout=2.0)

@@ -1,0 +1,74 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On-CPU (this container) the wrappers run the kernels under
+``interpret=True`` for validation; on TPU they compile via Mosaic. Both
+kernels get a ``jax.custom_vjp`` whose backward falls back to the
+differentiable pure-jnp reference (recompute-based — the standard pattern
+until dedicated backward kernels land; forward is the serving-critical
+path)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ssd import ssd_scan_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=0, schedule="serpentine",
+                    block_q=128, block_k=128):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               schedule=schedule, block_q=block_q,
+                               block_k=block_k, interpret=_on_cpu())
+
+
+def _fa_fwd(q, k, v, causal, window, schedule, block_q, block_k):
+    out = flash_attention(q, k, v, causal, window, schedule, block_q,
+                          block_k)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, schedule, block_q, block_k, resid, g):
+    q, k, v = resid
+    _, vjp = jax.vjp(
+        lambda q, k, v: REF.attention_ref(q, k, v, causal=causal,
+                                          window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_scan(x, dt, a_log, bmat, cmat, chunk=128):
+    return ssd_scan_fwd(x, dt, a_log, bmat, cmat, chunk=chunk,
+                        interpret=_on_cpu())
+
+
+def _ssd_fwd(x, dt, a_log, bmat, cmat, chunk):
+    return ssd_scan(x, dt, a_log, bmat, cmat, chunk), (x, dt, a_log, bmat,
+                                                       cmat)
+
+
+def _ssd_bwd(chunk, resid, g):
+    x, dt, a_log, bmat, cmat = resid
+    _, vjp = jax.vjp(
+        lambda *a: REF.ssd_ref(*a, chunk=chunk), x, dt, a_log, bmat, cmat)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the test ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ssm import ssd_chunked
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Exact softmax attention. q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), kk.astype(F32))
+    s = s / np.sqrt(hd)
+    qp, kp = jnp.arange(Sq)[:, None], jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= kp > qp - window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(F32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a_log, bmat, cmat, *, chunk=64):
+    """SSD oracle — the model-zoo reference implementation itself."""
+    y, _ = ssd_chunked(x, dt, a_log, bmat, cmat, chunk)
+    return y
+
+
+def ssd_ref_sequential(x, dt, a_log, bmat, cmat):
+    """Slow fully-sequential SSM recurrence (oracle for the oracle)."""
+    B, S, H, Pd = x.shape
+    A = -jnp.exp(a_log.astype(F32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt.astype(F32) * A[None, :])            # (B,H)
+        bx = xt.astype(F32) * dtt.astype(F32)[..., None]
+        state = state * a[..., None, None] + jnp.einsum(
+            "bn,bhp->bhnp", bt.astype(F32), bx)
+        y = jnp.einsum("bn,bhnp->bhp", ct.astype(F32), state)
+        return state, y
+
+    state0 = jnp.zeros((B, H, bmat.shape[-1], Pd), F32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

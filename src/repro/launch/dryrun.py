@@ -1,0 +1,277 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module entry point. The first two lines below force 512
+host platform devices BEFORE any jax import so ``jax.make_mesh`` can build
+the production meshes. Never set this globally.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/artifacts
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch.mesh import make_ctx, make_production_mesh           # noqa: E402
+from repro.launch import steps as ST                                   # noqa: E402
+from repro.models import model as M_                                   # noqa: E402
+from repro.sharding.rules import shardings_for                         # noqa: E402
+
+# ---------------------------------------------------------------------------
+# v5e hardware constants (roofline)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\d]+\[[^\]]*\][^\s]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w-]*\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device bytes by collective kind, parsed from partitioned HLO."""
+    out: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        ty, kind = m.group(1), m.group(2)
+        b = _shape_bytes(ty)
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    return out
+
+
+def collective_seconds(stats: dict) -> float:
+    t = 0.0
+    for kind, d in stats.items():
+        factor = 2.0 if kind == "all-reduce" else 1.0   # ring AR moves ~2x
+        t += factor * d["bytes"] / ICI_BW
+    return t
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train), 2*N*D (prefill), 2*N_active*B (decode) conventions."""
+    n_active = M_.count_active_params(cfg, include_embed=False)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_encoder_decoder:
+            tokens += shape.global_batch * cfg.enc_frames
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+def shallow_depths(cfg) -> tuple[int, int]:
+    """Two reduced depths whose per-layer delta extrapolates exactly (they
+    respect the arch's layer-pattern period)."""
+    if cfg.shared_attn_every:                     # zamba2: cadence 6
+        return 6, 12
+    if cfg.first_dense_layers:                    # deepseek: 1 dense + k moe
+        return cfg.first_dense_layers + 2, cfg.first_dense_layers + 4
+    return 2, 4
+
+
+def _lower_compile(cfg, shape, ctx, kind):
+    step = ST.step_for_kind(cfg, ctx, kind)
+    batch = ST.batch_struct(cfg, shape)
+    batch_sh = ST.to_shardings(
+        ST.batch_pspecs(cfg, ctx, kind, shape.global_batch), ctx)
+    if kind == "train":
+        state = ST.train_state_struct(cfg, ctx)
+        state_sh = ST.train_state_shardings(cfg, ctx)
+        lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, None),
+                          donate_argnums=(0,)).lower(state, batch)
+    else:
+        params = M_.abstract_params(cfg, ctx.model_size)
+        # serve path: model-only sharding for dense weights (see rules())
+        params_sh = shardings_for(M_.logical_axes(cfg, ctx.model_size), ctx,
+                                  params, serve=True)
+        out_sh = (None, batch_sh["cache"]) if kind == "decode" else None
+        # decode: donate the batch (KV cache) so in-place cache updates
+        # alias instead of copying (EXPERIMENTS §Perf granite cell, iter 3)
+        donate = (1,) if kind == "decode" else ()
+        lowered = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                          out_shardings=out_sh,
+                          donate_argnums=donate).lower(params, batch)
+    return lowered.compile()
+
+
+def _rates(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": collective_stats(compiled.as_text())}
+
+
+def _extrapolate(r1, r2, L1, L2, L) -> dict:
+    """Linear in layer count: exact for homogeneous layer stacks."""
+    def lin(a, b):
+        return b + (b - a) * (L - L2) / (L2 - L1)
+    out = {"flops": lin(r1["flops"], r2["flops"]),
+           "bytes": lin(r1["bytes"], r2["bytes"]), "coll": {}}
+    kinds = set(r1["coll"]) | set(r2["coll"])
+    for k in kinds:
+        c1 = r1["coll"].get(k, {"count": 0, "bytes": 0})
+        c2 = r2["coll"].get(k, {"count": 0, "bytes": 0})
+        out["coll"][k] = {
+            "count": int(round(lin(c1["count"], c2["count"]))),
+            "bytes": lin(c1["bytes"], c2["bytes"]),
+        }
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    """Two-phase dry-run (see EXPERIMENTS.md methodology):
+
+    A) full config with scanned layers: proves the cell lowers+compiles on
+       the production mesh and yields the honest per-device memory figure.
+    B) two shallow *unrolled* configs (inner loops unrolled too): XLA's
+       cost analysis counts loop bodies once, so rates are taken from the
+       unrolled graphs and extrapolated linearly in depth — exact for the
+       homogeneous layer stacks used here.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = make_ctx(mesh)
+    n_chips = mesh.size
+
+    with mesh:
+        # -- phase A: full config, scan, memory truth -----------------------
+        t0 = time.time()
+        comp_full = _lower_compile(cfg, shape, ctx, shape.kind)
+        t_full = time.time() - t0
+        ma = comp_full.memory_analysis()
+
+        # -- phase B: shallow unrolled rates --------------------------------
+        L1, L2 = shallow_depths(cfg)
+        t0 = time.time()
+        rates = []
+        for Ls in (L1, L2):
+            kw = dict(n_layers=Ls, scan_layers=False)
+            if cfg.is_encoder_decoder:
+                kw["n_enc_layers"] = Ls
+            c = cfg.replace(**kw)
+            rates.append(_rates(_lower_compile(c, shape, ctx, shape.kind)))
+        t_shallow = time.time() - t0
+        R = _extrapolate(rates[0], rates[1], L1, L2, cfg.n_layers)
+
+    flops_dev, bytes_dev, coll = R["flops"], R["bytes"], R["coll"]
+    terms = {"compute": flops_dev / PEAK_FLOPS,
+             "memory": bytes_dev / HBM_BW,
+             "collective": collective_seconds(coll)}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_total = flops_dev * n_chips
+
+    mem = {k: getattr(ma, k) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")}
+    peak_bytes = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+                  + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"])
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "chips": n_chips,
+        "compile_s": round(t_full, 2), "shallow_s": round(t_shallow, 2),
+        "memory": mem, "peak_bytes_per_device": peak_bytes,
+        "fits_16gb": bool(peak_bytes < 16e9),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collectives": coll,
+        "roofline_seconds": terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_flops_total,
+        "useful_flop_ratio": (mf / hlo_flops_total) if hlo_flops_total else 0,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = os.path.join(
+                    args.out, f"dryrun_{arch}_{shape}_{mesh_kind}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip-existing] {path}")
+                    continue
+                try:
+                    res = run_cell(arch, shape, mesh_kind)
+                except Exception as e:       # a failure here is a bug
+                    failures += 1
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                msg = res["status"]
+                if res["status"] == "ok":
+                    msg += (f" compile={res['compile_s']}s"
+                            f" peak={res['peak_bytes_per_device']/1e9:.2f}GB"
+                            f" dom={res['dominant']}")
+                print(f"[{arch} x {shape} x {mesh_kind}] {msg}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""jit-able train / serve steps + their input specs and shardings.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell, and the ones the real train/serve loops execute.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as D_
+from repro.models import model as M_
+from repro.sharding.ctx import MeshCtx
+from repro.sharding.rules import shardings_for
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, kind: str | None = None):
+    """Abstract input batch for the given shape. kind defaults to shape.kind."""
+    kind = kind or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+
+    if kind == "decode":
+        return {"tokens": sd((B,), i32),
+                "cache": D_.init_cache(cfg, B, S, abstract=True)}
+
+    batch = {}
+    s_text = S - cfg.n_patches if cfg.n_patches else S
+    batch["tokens"] = sd((B, s_text), i32)
+    if cfg.n_patches:
+        batch["patches"] = sd((B, cfg.n_patches, cfg.d_model), cfg.dtype)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = sd((B, cfg.enc_frames, cfg.d_model), cfg.dtype)
+    if kind == "train":
+        batch["labels"] = sd((B, s_text), i32)
+        batch["mask"] = sd((B, s_text), F32)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, ctx: MeshCtx, kind: str,
+                 global_batch: int = 0):
+    ba = ctx.batch_axes
+    if global_batch and global_batch % ctx.data_size != 0:
+        ba = None       # tiny batches (e.g. long_500k B=1) stay replicated
+    if kind == "decode":
+        return {"tokens": P(ba), "cache": D_.cache_pspecs(cfg, ctx, ba)}
+    specs = {"tokens": P(ba, None)}
+    if cfg.n_patches:
+        specs["patches"] = P(ba, None, None)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = P(ba, None, None)
+    if kind == "train":
+        specs["labels"] = P(ba, None)
+        specs["mask"] = P(ba, None)
+    return specs
+
+
+def to_shardings(pspec_tree, ctx: MeshCtx):
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def train_state_struct(cfg: ModelConfig, ctx: MeshCtx):
+    params = M_.abstract_params(cfg, ctx.model_size)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, F32)
+    return {"params": params,
+            "opt": {"mu": jax.tree.map(f32, params),
+                    "nu": jax.tree.map(f32, params),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def train_state_shardings(cfg: ModelConfig, ctx: MeshCtx):
+    ps = shardings_for(M_.logical_axes(cfg, ctx.model_size), ctx,
+                       M_.abstract_params(cfg, ctx.model_size))
+    return {"params": ps,
+            "opt": {"mu": ps, "nu": ps,
+                    "step": NamedSharding(ctx.mesh, P())}}
+
+
+def init_train_state(cfg: ModelConfig, ctx: MeshCtx, key,
+                     oc: OptConfig = OptConfig()):
+    params = M_.init_params(cfg, key, ctx.model_size)
+    return {"params": params,
+            "opt": init_opt_state(params, oc.master_fp32)}
+
+
+def make_train_step(cfg: ModelConfig, ctx: MeshCtx, oc: OptConfig = OptConfig()):
+    def train_step(state, batch):
+        def lf(params):
+            return M_.loss_fn(params, batch, cfg, ctx)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state["params"])
+        new_p, new_opt, gn = adamw_update(grads, state["opt"],
+                                          state["params"], oc)
+        metrics = dict(metrics, loss=loss, grad_norm=gn)
+        return {"params": new_p, "opt": new_opt}, metrics
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, ctx: MeshCtx):
+    def prefill(params, batch):
+        return D_.prefill_step(params, batch, cfg, ctx)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx: MeshCtx):
+    def decode(params, batch):
+        return D_.decode_step(params, batch["cache"], batch["tokens"],
+                              cfg, ctx)
+    return decode
+
+
+def step_for_kind(cfg: ModelConfig, ctx: MeshCtx, kind: str):
+    if kind == "train":
+        return make_train_step(cfg, ctx)
+    if kind == "prefill":
+        return make_prefill_step(cfg, ctx)
+    return make_decode_step(cfg, ctx)

@@ -1,0 +1,40 @@
+"""Training launcher: ``PYTHONPATH=src python -m repro.launch.train
+--arch granite-3-2b --smoke --steps 100``.
+
+``--smoke`` trains the reduced config on the local device (CPU-runnable
+end-to-end driver); without it, the full config trains on the production
+mesh (requires real hardware; the dry-run proves the program compiles).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_config
+    from repro.sharding.ctx import trivial_ctx
+    from repro.train.train_loop import RunConfig, train
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        ctx = trivial_ctx()
+    else:
+        from repro.launch.mesh import make_ctx, make_production_mesh
+        ctx = make_ctx(make_production_mesh(multi_pod=args.multi_pod))
+
+    out = train(cfg, ctx, RunConfig(steps=args.steps,
+                                    ckpt_dir=args.ckpt_dir))
+    print(f"[train] done; final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

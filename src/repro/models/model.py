@@ -1,0 +1,365 @@
+"""Unified model facade: init/abstract params, train loss, prefill, decode.
+
+Sharding strategy (DESIGN.md §4): activations are sequence-sharded over the
+``model`` mesh axis (SP/CP); GQA attention is context-parallel (q
+seq-sharded, small GQA KV gathered); MLA attention is head-parallel (128
+heads divide every mesh); MoE dispatches through the shard_map EP(+TP)
+hybrid in ``layers.moe_forward``; decode KV caches are sequence-sharded
+(flash-decoding: softmax reductions become all-reduces). Weights are
+FSDP-sharded over ``data`` via the logical axis rules.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P_
+from repro.models import specs as S_
+from repro.models.layers import (
+    F32, chunked_attention, decode_attention, mlp_gelu, mlp_swiglu,
+    moe_forward, rmsnorm, rope, scan_or_unroll, sinusoidal_pos,
+)
+from repro.models.ssm import mamba2_mixer
+from repro.sharding.ctx import MeshCtx, constrain as cs
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def param_specs(cfg: ModelConfig, model_size: int = 1):
+    return S_.param_specs(cfg, model_size)
+
+
+def init_params(cfg: ModelConfig, key, model_size: int = 1):
+    return P_.init_params(param_specs(cfg, model_size), key, cfg.dtype)
+
+
+def abstract_params(cfg: ModelConfig, model_size: int = 1):
+    return P_.abstract_params(param_specs(cfg, model_size), cfg.dtype)
+
+
+def logical_axes(cfg: ModelConfig, model_size: int = 1):
+    return P_.logical_axes(param_specs(cfg, model_size))
+
+
+def count_params(cfg: ModelConfig, include_embed: bool = True) -> int:
+    total = P_.count_specs(param_specs(cfg, 1))
+    if not include_embed:
+        emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        total -= emb
+    return total
+
+
+def count_active_params(cfg: ModelConfig, include_embed: bool = True) -> int:
+    total = count_params(cfg, include_embed)
+    if not cfg.n_experts:
+        return total
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    routed = n_moe * 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts
+    active_routed = n_moe * 3 * cfg.d_model * cfg.moe_d_ff * cfg.top_k
+    return total - routed + active_routed
+
+
+# ---------------------------------------------------------------------------
+# attention blocks (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+def attn_forward(x, p, cfg, ctx, positions, *, causal, window=0,
+                 kv_src=None, kv_positions=None, collect_kv=False):
+    """GQA attention, context-parallel. x: (B,S,D). kv_src enables
+    cross-attention. Returns (out, (k, v) if collect_kv)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_src is None else kv_src
+    Sk = src.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"]).reshape(B, Sk, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"]).reshape(B, Sk, KV, hd)
+    if cfg.rope_theta:
+        kv_pos = positions if kv_positions is None else kv_positions
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    q = cs(q, ctx, "B", "M", None, None)       # CP: q rows sharded
+    k = cs(k, ctx, "B", None, None, None)      # small GQA kv: gathered
+    v = cs(v, ctx, "B", None, None, None)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            unroll=not cfg.scan_layers)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), p["wo"])
+    return (out, (k, v)) if collect_kv else (out, None)
+
+
+def mla_forward(x, p, cfg, ctx, positions, *, collect_kv=False):
+    """DeepSeek-v2 MLA, head-parallel. Returns (out, (ckv, kr))."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    R, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    q = rmsnorm(jnp.einsum("bsd,dq->bsq", x, p["wq_a"]), p["q_norm"],
+                cfg.norm_eps)
+    q = jnp.einsum("bsq,qh->bsh", q, p["wq_b"]).reshape(B, S, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = rope(qr, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, kr = ckv_full[..., :R], ckv_full[..., R:]
+    ckv = rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
+    kr = rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    kv = jnp.einsum("bsr,rh->bsh", ckv, p["wkv_b"]).reshape(B, S, H, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, dr))], axis=-1)
+    qf = jnp.concatenate([qn, qr], axis=-1)
+    # head-parallel: 128 heads divide every mesh
+    qf = cs(qf, ctx, "B", None, "M", None)
+    k = cs(k, ctx, "B", None, "M", None)
+    v = cs(v, ctx, "B", None, "M", None)
+    out = chunked_attention(qf, k, v, causal=True,
+                            unroll=not cfg.scan_layers)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * dv), p["wo"])
+    return (out, (ckv, kr)) if collect_kv else (out, None)
+
+
+def mlp_forward(x, p, cfg, d_ff_kind="mlp"):
+    if "wg" in p:
+        return mlp_swiglu(x, p["wg"], p["wu"], p["wd"])
+    return mlp_gelu(x, p["wi"], p["wd"])
+
+
+# ---------------------------------------------------------------------------
+# decoder layer (train / prefill), one scan step
+# ---------------------------------------------------------------------------
+def _dense_or_moe(h, lp, cfg, ctx):
+    """FFN sub-block. Returns (delta, aux)."""
+    if "moe" in lp:
+        p = lp["moe"]
+        hn = rmsnorm(h, p["ln"], cfg.norm_eps)
+        y, aux = moe_forward(hn, p, cfg, ctx)
+        if cfg.n_shared_experts:
+            y = y + mlp_swiglu(hn, p["sh_wg"], p["sh_wu"], p["sh_wd"])
+        return y, aux
+    p = lp["mlp"]
+    return mlp_forward(rmsnorm(h, p["ln"], cfg.norm_eps), p, cfg), 0.0
+
+
+def decoder_layer(x, lp, cfg, ctx, positions, *, collect_kv=False):
+    """Returns (x_out, aux, kv) — kv populated when collect_kv."""
+    kv = None
+    if "mamba" in lp:
+        h = rmsnorm(x, lp["mamba"]["ln"], cfg.norm_eps)
+        y, (state, conv) = mamba2_mixer(h, lp["mamba"], cfg, ctx)
+        x = x + y
+        kv = (state, conv) if collect_kv else None
+        return cs(x, ctx, "B", "M", None), 0.0, kv
+    ap = lp["attn"]
+    hn = rmsnorm(x, ap["ln"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        y, kv = mla_forward(hn, ap, cfg, ctx, positions, collect_kv=collect_kv)
+    else:
+        y, kv = attn_forward(hn, ap, cfg, ctx, positions, causal=True,
+                             window=cfg.sliding_window, collect_kv=collect_kv)
+    x = x + y
+    y, aux = _dense_or_moe(x, lp, cfg, ctx)
+    x = x + y
+    return cs(x, ctx, "B", "M", None), aux, kv
+
+
+def shared_block(x, bp, cfg, ctx, positions, *, collect_kv=False):
+    """zamba2 shared attention+MLP block (single weight set)."""
+    ap, mp = bp["attn"], bp["mlp"]
+    y, kv = attn_forward(rmsnorm(x, ap["ln"], cfg.norm_eps), ap, cfg, ctx,
+                         positions, causal=True, collect_kv=collect_kv)
+    x = x + y
+    x = x + mlp_forward(rmsnorm(x, mp["ln"], cfg.norm_eps), mp, cfg)
+    return cs(x, ctx, "B", "M", None), kv
+
+
+# ---------------------------------------------------------------------------
+# embedding / loss
+# ---------------------------------------------------------------------------
+def embed_tokens(params, tokens, cfg, ctx):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    return cs(h, ctx, "B", "M", None)
+
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T          # (D, V)
+    return params["unembed"]
+
+
+def xent_loss(h, params, labels, mask, cfg, ctx, chunk: int = 512):
+    """Chunked softmax cross-entropy. h: (B,S,D); labels/mask: (B,S)."""
+    B, S, D = h.shape
+    W = unembed_matrix(params, cfg)
+    chunk = min(chunk, S)
+    nc = S // chunk
+
+    def body(carry, i):
+        loss_sum, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+        logits = jnp.einsum("bcd,dv->bcv", hc, W).astype(F32)
+        logits = cs(logits, ctx, "B", None, "M")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        loss_sum = loss_sum + jnp.sum((logz - ll) * mc)
+        return (loss_sum + 0.0, cnt + jnp.sum(mc)), None
+
+    (loss_sum, cnt), _ = scan_or_unroll(
+        body, (jnp.zeros((), F32), jnp.zeros((), F32)), jnp.arange(nc),
+        scan=cfg.scan_layers)
+    return loss_sum / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# full forward: decoder-only LM families (dense|moe|ssm|hybrid|vlm)
+# ---------------------------------------------------------------------------
+def _scan_layers(x, layers_p, cfg, ctx, positions, shared_p=None,
+                 collect_kv=False):
+    """Scan the homogeneous stacked layers; handles zamba2's shared block.
+    Returns (x, aux_total, stacked_kv)."""
+    n_scan = jax.tree.leaves(layers_p)[0].shape[0]
+
+    def step(carry, xs):
+        x, aux = carry
+        i, lp = xs
+        if shared_p is not None and cfg.shared_attn_every:
+            def with_attn(x):
+                y, _ = shared_block(x, shared_p, cfg, ctx, positions)
+                return y
+            pred = i % cfg.shared_attn_every == 0
+            if isinstance(pred, bool):            # unrolled: static branch
+                x = with_attn(x) if pred else x
+            else:
+                x = jax.lax.cond(pred, with_attn, lambda x: x, x)
+        x, a, kv = decoder_layer(x, lp, cfg, ctx, positions,
+                                 collect_kv=collect_kv)
+        return (x, aux + a), kv
+
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    if cfg.scan_layers:
+        (x, aux), kvs = jax.lax.scan(
+            step_fn, (x, jnp.zeros((), F32)), (jnp.arange(n_scan), layers_p))
+        return x, aux, kvs
+    # unrolled (dry-run): python layer index -> conds resolve statically
+    carry, kv_list = (x, jnp.zeros((), F32)), []
+    for i in range(n_scan):
+        lp = jax.tree.map(lambda a: a[i], layers_p)
+        carry, kv = step_fn(carry, (i, lp))
+        kv_list.append(kv)
+    x, aux = carry
+    kvs = (jax.tree.map(lambda *zs: jnp.stack(zs), *kv_list)
+           if kv_list and jax.tree.leaves(kv_list[0]) else None)
+    return x, aux, kvs
+
+
+def forward_lm(params, batch, cfg, ctx, *, collect_kv=False):
+    """Decoder-only forward. batch: tokens (B,S_text) [+ patches (B,P,D)].
+    Returns (hidden, aux, caches-dict-pieces)."""
+    tokens = batch["tokens"]
+    h = embed_tokens(params, tokens, cfg, ctx)
+    if cfg.n_patches:   # vlm: splice patch embeddings as a prefix
+        patches = batch["patches"].astype(cfg.dtype)
+        h = jnp.concatenate([patches, h], axis=1)
+        h = cs(h, ctx, "B", "M", None)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    aux = jnp.zeros((), F32)
+    dense_kvs = None
+    if cfg.first_dense_layers:
+        def dense_step(x, lp):
+            ap = lp["attn"]
+            hn = rmsnorm(x, ap["ln"], cfg.norm_eps)
+            y, kv = (mla_forward(hn, ap, cfg, ctx, positions,
+                                 collect_kv=collect_kv)
+                     if cfg.attention == "mla" else
+                     attn_forward(hn, ap, cfg, ctx, positions, causal=True,
+                                  window=cfg.sliding_window,
+                                  collect_kv=collect_kv))
+            x = x + y
+            x = x + mlp_forward(rmsnorm(x, lp["mlp"]["ln"], cfg.norm_eps),
+                                lp["mlp"], cfg)
+            return cs(x, ctx, "B", "M", None), kv
+        h, dense_kvs = scan_or_unroll(
+            lambda c, lp: dense_step(c, lp), h, params["dense_layers"],
+            scan=cfg.scan_layers)
+
+    h, aux, kvs = _scan_layers(h, params["layers"], cfg, ctx, positions,
+                               shared_p=params.get("shared_block"),
+                               collect_kv=collect_kv)
+
+    # zamba2's shared-attn KV during prefill is recomputed at decode start;
+    # for the dry-run serve path we collect it separately (see prefill_step).
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux, {"layers": kvs, "dense": dense_kvs}
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+def forward_encdec(params, batch, cfg, ctx, *, collect_kv=False):
+    """batch: frames (B,F,D) stub embeddings + tokens (B,S)."""
+    frames = batch["frames"].astype(cfg.dtype)
+    tokens = batch["tokens"]
+    B, Fr, D = frames.shape
+    S = tokens.shape[1]
+    epos = jnp.broadcast_to(jnp.arange(Fr), (B, Fr))
+    dpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    e = frames + sinusoidal_pos(epos, D, cfg.dtype)
+    e = cs(e, ctx, "B", "M", None)
+
+    def enc_step(x, lp):
+        ap, mp = lp["attn"], lp["mlp"]
+        y, _ = attn_forward(rmsnorm(x, ap["ln"], cfg.norm_eps), ap, cfg, ctx,
+                            epos, causal=False)
+        x = x + y
+        x = x + mlp_forward(rmsnorm(x, mp["ln"], cfg.norm_eps), mp, cfg)
+        return cs(x, ctx, "B", "M", None), None
+
+    estep = jax.checkpoint(enc_step) if cfg.remat else enc_step
+    e, _ = scan_or_unroll(estep, e, params["enc_layers"],
+                          scan=cfg.scan_layers)
+    e = rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+
+    d = embed_tokens(params, tokens, cfg, ctx)
+    d = d + sinusoidal_pos(dpos, D, cfg.dtype)
+
+    def dec_step(x, lp):
+        ap, xp, mp = lp["attn"], lp["xattn"], lp["mlp"]
+        y, skv = attn_forward(rmsnorm(x, ap["ln"], cfg.norm_eps), ap, cfg,
+                              ctx, dpos, causal=True, collect_kv=collect_kv)
+        x = x + y
+        y, xkv = attn_forward(rmsnorm(x, xp["ln"], cfg.norm_eps), xp, cfg,
+                              ctx, dpos, causal=False, kv_src=e,
+                              kv_positions=epos, collect_kv=collect_kv)
+        x = x + y
+        x = x + mlp_forward(rmsnorm(x, mp["ln"], cfg.norm_eps), mp, cfg)
+        return cs(x, ctx, "B", "M", None), (skv, xkv)
+
+    dstep = jax.checkpoint(dec_step) if cfg.remat else dec_step
+    d, kvs = scan_or_unroll(dstep, d, params["dec_layers"],
+                            scan=cfg.scan_layers)
+    d = rmsnorm(d, params["final_norm"], cfg.norm_eps)
+    return d, jnp.zeros((), F32), {"layers": kvs}
+
+
+# ---------------------------------------------------------------------------
+# public train loss
+# ---------------------------------------------------------------------------
+def loss_fn(params, batch, cfg: ModelConfig, ctx: MeshCtx,
+            aux_weight: float = 0.01):
+    fwd = forward_encdec if cfg.is_encoder_decoder else forward_lm
+    h, aux, _ = fwd(params, batch, cfg, ctx)
+    labels, mask = batch["labels"], batch["mask"].astype(F32)
+    if cfg.n_patches:   # loss only over text positions; pad label block
+        pad = jnp.zeros((labels.shape[0], cfg.n_patches), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        mask = jnp.concatenate([jnp.zeros_like(pad, F32), mask], axis=1)
+    loss = xent_loss(h, params, labels, mask, cfg, ctx)
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}

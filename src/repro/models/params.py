@@ -1,0 +1,84 @@
+"""Parameter-spec system.
+
+Each parameter is declared once as a ``Param`` (shape + logical axes +
+initializer). From the spec tree we derive, consistently:
+
+* materialized parameters           (``init_params``)
+* ShapeDtypeStruct stand-ins        (``abstract_params``) — dry-run, no alloc
+* logical-axes tree                 (``logical_axes``) → mesh shardings
+
+Logical axis vocabulary (mapped to mesh axes by ``repro.sharding.rules``):
+  "embed"   — model width D            (FSDP'd over data for params)
+  "vocab"   — vocabulary               (TP over model)
+  "heads"   — attention head blocks    (TP over model)
+  "kv_heads"— kv head blocks
+  "mlp"     — FFN hidden               (TP over model)
+  "experts" — MoE expert dim           (EP over model)
+  "layers"  — stacked scan dim         (never sharded; PP would split it)
+  None      — replicated dim
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Param(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]           # logical axis name (str) or None per dim
+    init: str = "normal"            # normal|zeros|ones|embed
+    scale: float = 0.0              # 0 -> 1/sqrt(fan_in) (last-dim-out conv.)
+
+    def fan_in(self) -> int:
+        return int(np.prod(self.shape[:-1])) if len(self.shape) > 1 else 1
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def tree_map_params(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=is_param)
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scan) dimension to every spec in the subtree."""
+    return tree_map_params(
+        lambda p: Param((n,) + p.shape, (axis_name,) + p.axes, p.init, p.scale),
+        specs)
+
+
+def abstract_params(specs, dtype):
+    return tree_map_params(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), specs)
+
+
+def logical_axes(specs):
+    return tree_map_params(lambda p: p.axes, specs)
+
+
+def init_params(specs, key, dtype):
+    """Materialize parameters. Deterministic per-leaf fold of the key."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_param)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for i, p in enumerate(leaves):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        else:
+            scale = p.scale if p.scale else 1.0 / np.sqrt(max(p.fan_in(), 1))
+            if p.init == "embed":
+                scale = 0.02
+            out.append((jax.random.normal(keys[i], p.shape, jnp.float32)
+                        * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_specs(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_param)
+    return int(sum(np.prod(p.shape) for p in leaves))

@@ -1,0 +1,159 @@
+"""Per-architecture parameter spec trees (see ``repro.models.params``).
+
+Layout decisions (see DESIGN.md §4):
+* weights are FSDP-sharded: logical axis "embed" (or the largest dim) maps
+  to the ``data`` mesh axis; optimizer states inherit it (ZeRO-1).
+* MoE expert weights use the *physical* EP(+TP) layout
+  ``(M, E_loc, D, F_t)`` where M = model-axis size, ``F_t = F / tpi``
+  (pure relayout of the logical ``(E, D, F)``; see layers.moe_topology).
+* vocab maps to ``model`` so the chunked cross-entropy reduces over a
+  model-axis all-reduce.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import moe_topology
+from repro.models.params import Param, stack_specs
+
+
+# ---------------------------------------------------------------------------
+# block param specs
+# ---------------------------------------------------------------------------
+def attn_specs(cfg: ModelConfig, prefix_norm: bool = True):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": Param((D, H * hd), ("embed", "heads")),
+        "wk": Param((D, KV * hd), ("embed", "kv_heads")),
+        "wv": Param((D, KV * hd), ("embed", "kv_heads")),
+        "wo": Param((H * hd, D), ("heads", "embed")),
+    }
+    if prefix_norm:
+        s["ln"] = Param((D,), (None,), "ones")
+    return s
+
+
+def mla_specs(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    R, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "ln": Param((D,), (None,), "ones"),
+        "wq_a": Param((D, qr), ("embed", None)),
+        "q_norm": Param((qr,), (None,), "ones"),
+        "wq_b": Param((qr, H * (dn + dr)), (None, "heads")),
+        "wkv_a": Param((D, R + dr), ("embed", None)),
+        "kv_norm": Param((R,), (None,), "ones"),
+        "wkv_b": Param((R, H * (dn + dv)), (None, "heads")),
+        "wo": Param((H * dv, D), ("heads", "embed")),
+    }
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int):
+    D = cfg.d_model
+    s = {"ln": Param((D,), (None,), "ones")}
+    if cfg.mlp_type == "swiglu":
+        s.update(wg=Param((D, d_ff), ("embed", "mlp")),
+                 wu=Param((D, d_ff), ("embed", "mlp")),
+                 wd=Param((d_ff, D), ("mlp", "embed")))
+    else:  # gelu
+        s.update(wi=Param((D, d_ff), ("embed", "mlp")),
+                 wd=Param((d_ff, D), ("mlp", "embed")))
+    return s
+
+
+def moe_specs(cfg: ModelConfig, model_size: int):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ep, tpi, e_loc = moe_topology(E, model_size)
+    M, Ft = ep * tpi, F // tpi
+    s = {
+        "ln": Param((D,), (None,), "ones"),
+        "w_router": Param((D, E), (None, None)),
+        "wg": Param((M, e_loc, D, Ft),
+                    ("expert_shard", None, "expert_embed", None)),
+        "wu": Param((M, e_loc, D, Ft),
+                    ("expert_shard", None, "expert_embed", None)),
+        "wd": Param((M, e_loc, Ft, D),
+                    ("expert_shard", None, None, "expert_embed")),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        s.update(sh_wg=Param((D, Fs), ("embed", "mlp")),
+                 sh_wu=Param((D, Fs), ("embed", "mlp")),
+                 sh_wd=Param((Fs, D), ("mlp", "embed")))
+    return s
+
+
+def mamba_specs(cfg: ModelConfig):
+    """Split projections (perf iteration zamba2/H1, EXPERIMENTS §Perf):
+    z/x are head-shardable over the model axis ("mlp"); the small B/C/dt
+    projection stays replicated, so the SSD runs head-parallel with no
+    per-layer gathers of the mixed concat dim."""
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    return {
+        "ln": Param((D,), (None,), "ones"),
+        "wzx": Param((D, 2 * di), ("embed", "mlp")),
+        "wbcdt": Param((D, 2 * N + H), ("embed", None)),
+        "conv_xw": Param((K, di), (None, "mlp")),
+        "conv_xb": Param((di,), ("mlp",), "zeros"),
+        "conv_bcw": Param((K, 2 * N), (None, None)),
+        "conv_bcb": Param((2 * N,), (None,), "zeros"),
+        "a_log": Param((H,), (None,), "zeros"),
+        "dt_bias": Param((H,), (None,), "zeros"),
+        "d_skip": Param((H,), (None,), "ones"),
+        "norm_w": Param((di,), (None,), "ones"),
+        "out_proj": Param((di, D), ("mlp", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full-model spec trees
+# ---------------------------------------------------------------------------
+def _decoder_layer_specs(cfg: ModelConfig, model_size: int):
+    """One (repeated/scanned) decoder layer for the LM families."""
+    if cfg.family == "ssm":
+        return {"mamba": mamba_specs(cfg)}
+    if cfg.family == "hybrid":
+        return {"mamba": mamba_specs(cfg)}          # shared attn lives top-level
+    layer = {}
+    if cfg.attention == "mla":
+        layer["attn"] = mla_specs(cfg)
+    else:
+        layer["attn"] = attn_specs(cfg)
+    if cfg.n_experts:
+        layer["moe"] = moe_specs(cfg, model_size)
+    else:
+        layer["mlp"] = mlp_specs(cfg, cfg.d_ff)
+    return layer
+
+
+def param_specs(cfg: ModelConfig, model_size: int = 1):
+    D, V = cfg.d_model, cfg.padded_vocab
+    top = {
+        "embed": Param((V, D), ("vocab", "embed"), "embed"),
+        "final_norm": Param((D,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        top["unembed"] = Param((D, V), ("embed", "vocab"))
+
+    if cfg.is_encoder_decoder:
+        enc_layer = {"attn": attn_specs(cfg), "mlp": mlp_specs(cfg, cfg.d_ff)}
+        dec_layer = {"attn": attn_specs(cfg),
+                     "xattn": attn_specs(cfg),
+                     "mlp": mlp_specs(cfg, cfg.d_ff)}
+        top["enc_layers"] = stack_specs(enc_layer, cfg.n_enc_layers)
+        top["enc_norm"] = Param((D,), (None,), "ones")
+        top["dec_layers"] = stack_specs(dec_layer, cfg.n_layers)
+        return top
+
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    top["layers"] = stack_specs(_decoder_layer_specs(cfg, model_size), n_scan)
+    if cfg.first_dense_layers:     # deepseek-v2: leading dense layer(s)
+        dense = {"attn": (mla_specs(cfg) if cfg.attention == "mla"
+                          else attn_specs(cfg)),
+                 "mlp": mlp_specs(cfg, cfg.first_dense_d_ff or cfg.d_ff)}
+        top["dense_layers"] = stack_specs(dense, cfg.first_dense_layers)
+    if cfg.shared_attn_every:       # zamba2: one shared attn+mlp block
+        top["shared_block"] = {"attn": attn_specs(cfg),
+                               "mlp": mlp_specs(cfg, cfg.d_ff)}
+    return top

@@ -1,0 +1,186 @@
+"""Mamba-2 (SSD — state-space duality) block, pure-jnp reference path.
+
+The chunked SSD algorithm follows arXiv:2405.21060: intra-chunk attention-
+like term + inter-chunk state recurrence (``lax.scan`` over chunks). The
+Pallas kernel in ``repro.kernels.ssd`` implements the same contract and is
+validated against ``ssd_chunked`` (this file is the oracle).
+
+Single group (G=1) for B/C projections; per-head decays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import scan_or_unroll
+from repro.sharding.ctx import constrain as cs
+
+F32 = jnp.float32
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int, state0=None,
+                unroll: bool = False, remat_groups: int = 4):
+    """Chunked SSD scan.
+
+    x:    (B, S, H, P)   inputs per head
+    dt:   (B, S, H)      softplus'd step sizes
+    a_log:(H,)           A = -exp(a_log)
+    bmat: (B, S, N)      input->state projection (G=1, shared over heads)
+    cmat: (B, S, N)      state->output projection
+    Returns y (B, S, H, P), final_state (B, H, N, P).
+    """
+    B, S, H, Pdim = x.shape
+    N = bmat.shape[-1]
+    Q = min(chunk, S)
+    if unroll:                       # cap the unrolled body count at 16
+        Q = max(Q, (S + 15) // 16)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    A = -jnp.exp(a_log.astype(F32))                      # (H,) negative
+    dt = dt.astype(F32)
+    loga = dt * A[None, None, :]                          # (B,S,H) log-decay
+    bx = x.astype(F32) * dt[..., None]                    # dt-scaled input
+
+    # chunked views, chunk-major for scan
+    def ck(t, shape):
+        return t.reshape((B, nc) + shape).transpose((1, 0) + tuple(range(2, 2 + len(shape))))
+
+    loga_c = ck(loga, (Q, H))                             # (nc,B,Q,H)
+    bx_c = ck(bx, (Q, H, Pdim))
+    b_c = ck(bmat.astype(F32), (Q, N))
+    c_c = ck(cmat.astype(F32), (Q, N))
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, Pdim), F32)
+
+    def body(state, xs):
+        la, bxq, bq, cq = xs                              # per-chunk blocks
+        cum = jnp.cumsum(la, axis=1)                      # (B,Q,H) inclusive
+        total = cum[:, -1:, :]                            # (B,1,H)
+        # intra-chunk: masked (C_i . B_j) * exp(cum_i - cum_j), j <= i
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)           # (B,Q,Q)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,H) i-j
+        iota = jnp.arange(Q)
+        causal = (iota[:, None] >= iota[None, :])[None, :, :, None]
+        m = jnp.where(causal, jnp.exp(seg), 0.0) * cb[..., None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, bxq)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cum)                           # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", cq, state, decay_in)
+        # state update: decay whole chunk + inject chunk inputs
+        decay_out = jnp.exp(total - cum)                  # (B,Q,H)
+        inj = jnp.einsum("bjn,bjhp,bjh->bhnp", bq, bxq, decay_out)
+        state = state * jnp.exp(total).transpose(0, 2, 1)[..., None] + inj
+        return state, y_intra + y_inter
+
+    xs = (loga_c, bx_c, b_c, c_c)
+    if unroll or remat_groups <= 1 or nc % remat_groups or nc == remat_groups:
+        state, y_c = scan_or_unroll(body, state0, xs, scan=not unroll)
+    else:
+        # nested remat (perf iteration zamba2/H2): save only every
+        # (nc/remat_groups)-th inter-chunk state for backward; the inner
+        # chunks recompute — peak bwd memory drops ~(nc/groups)x.
+        g = remat_groups
+        per = nc // g
+        xs_g = jax.tree.map(
+            lambda a: a.reshape((g, per) + a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def group_body(state, xs_one):
+            return jax.lax.scan(body, state, xs_one)
+
+        state, y_g = jax.lax.scan(group_body, state0, xs_g)
+        y_c = y_g.reshape((nc,) + y_g.shape[2:])
+    y = y_c.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Pdim)
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(x, dt, a_log, bmat, cmat, state):
+    """Single-token SSD update. x: (B,H,P); dt: (B,H); b/c: (B,N);
+    state: (B,H,N,P) -> y (B,H,P), new state."""
+    A = -jnp.exp(a_log.astype(F32))
+    a = jnp.exp(dt.astype(F32) * A[None, :])              # (B,H)
+    bx = x.astype(F32) * dt.astype(F32)[..., None]        # (B,H,P)
+    state = state * a[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bmat.astype(F32), bx)
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(F32), state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 mixer block
+# ---------------------------------------------------------------------------
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); b: (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba2_mixer(x, p, cfg, ctx=None, *, state=None, conv_state=None,
+                 decode=False):
+    """x: (B, S, D) (S=1 for decode). Returns (y, (ssm_state, conv_state)).
+
+    p: wzx (D, 2*di), wbcdt (D, 2N+H), conv_xw/conv_bcw split depthwise
+       convs, a_log (H,), dt_bias (H,), d_skip (H,), norm_w (di,),
+       out_proj (di, D). z/x are head-sharded; B/C/dt replicated.
+    """
+    B, S, D = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv
+
+    # head-parallel SSD (perf iteration zamba2/H1', EXPERIMENTS §Perf):
+    # the SSD recurrence is sequential over seq, so seq-sharded operands
+    # would make GSPMD snake the scan across devices (collective-permute
+    # per chunk). Constrain the mixer internals to seq-replicated /
+    # head-sharded — heads are independent, so the scan is local.
+    zx = jnp.einsum("bsd,de->bse", x, p["wzx"])          # (B,S,2di)
+    zx = cs(zx, ctx, "B", None, "M")
+    bcdt = jnp.einsum("bsd,de->bse", x, p["wbcdt"])      # (B,S,2N+H) repl.
+    bcdt = cs(bcdt, ctx, "B", None, None)
+    z, xs_r = jnp.split(zx, [di], axis=-1)
+    bc, dt = jnp.split(bcdt, [2 * N], axis=-1)
+
+    if decode:
+        # roll conv state, apply conv at the single new position
+        cx, cbc = jnp.split(conv_state, [di], axis=-1)
+        fx = jnp.concatenate([cx, xs_r], axis=1)             # (B, K, di)
+        fbc = jnp.concatenate([cbc, bc], axis=1)             # (B, K, 2N)
+        xs_c = (fx * p["conv_xw"][None]).sum(1, keepdims=True) + p["conv_xb"]
+        bc_c = (fbc * p["conv_bcw"][None]).sum(1, keepdims=True) + p["conv_bcb"]
+        conv_state = jnp.concatenate([fx[:, 1:], fbc[:, 1:]], axis=-1)
+    else:
+        xs_c = causal_conv(xs_r, p["conv_xw"], p["conv_xb"])
+        bc_c = causal_conv(bc, p["conv_bcw"], p["conv_bcb"])
+        # decode-handoff conv state = last K-1 raw inputs (pad if S < K-1)
+        tail = jnp.concatenate([xs_r, bc], axis=-1)
+        conv_state = jnp.pad(tail[:, -(K - 1):, :],
+                             ((0, 0), (max(0, K - 1 - S), 0), (0, 0)))
+    xs_c = jax.nn.silu(xs_c.astype(F32)).astype(x.dtype)
+    bc_c = jax.nn.silu(bc_c.astype(F32)).astype(x.dtype)
+    xs, bmat, cmat = xs_c, bc_c[..., :N], bc_c[..., N:]
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))
+
+    xh = xs.reshape(B, S, H, Pd)
+    if decode:
+        y, state = ssd_decode_step(xh[:, 0], dt[:, 0], p["a_log"],
+                                   bmat[:, 0], cmat[:, 0], state)
+        y = y[:, None]
+    else:
+        y, state = ssd_chunked(xh, dt, p["a_log"], bmat, cmat,
+                               cfg.ssm_chunk, state0=state,
+                               unroll=not cfg.scan_layers)
+    y = y + xh.astype(y.dtype) * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+
+    # gated rmsnorm + output projection (norm reduces over the sharded di
+    # dim -> one small all-reduce; the out_proj partial-sums over di)
+    g = jax.nn.silu(z.astype(F32))
+    h = y.astype(F32) * g
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + cfg.norm_eps)
+    h = (h * p["norm_w"].astype(F32)).astype(x.dtype)
+    h = cs(h, ctx, "B", None, "M")
+    out = jnp.einsum("bse,ed->bsd", h, p["out_proj"])
+    return out, (state, conv_state)

@@ -1,0 +1,81 @@
+"""Logical-axis -> mesh-axis rules (MaxText-style).
+
+Parameters are 2-D FSDP-sharded: the "embed" dim maps to the data axes and
+the head/mlp/vocab/expert dims map to the model axis, so parameter and
+optimizer-state memory scales with the full device count (ZeRO); weights are
+all-gathered per layer at use (XLA overlaps the gathers under the
+latency-hiding scheduler).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.ctx import MeshCtx
+
+
+def rules(ctx: MeshCtx, serve: bool = False) -> dict:
+    """Train: 2-D FSDP (embed dims over data) — ZeRO memory scaling, one
+    weight gather per layer. Serve: dense weights are model-sharded ONLY
+    ("no ZeRO at inference"): decode is weight-streaming-bound and per-step
+    data-axis gathers would dominate its HBM traffic (EXPERIMENTS §Perf,
+    granite decode cell). MoE expert tables stay 2-D even at serve time
+    (they are far larger than HBM/16 and the decode path reads only the
+    active experts)."""
+    return {
+        "embed": () if serve else ctx.batch_axes,
+        "expert_embed": ctx.batch_axes,
+        "vocab": (ctx.model_axis,),
+        "heads": (ctx.model_axis,),
+        "kv_heads": (ctx.model_axis,),
+        "mlp": (ctx.model_axis,),
+        "expert_shard": (ctx.model_axis,),
+        "layers": (),                      # scanned dim, never sharded
+        None: (),
+    }
+
+
+def spec_for(axes: tuple, ctx: MeshCtx, serve: bool = False) -> P:
+    r = rules(ctx, serve)
+    out = []
+    for a in axes:
+        m = r.get(a, ())
+        if not m:
+            out.append(None)
+        elif len(m) == 1:
+            out.append(m[0])
+        else:
+            out.append(tuple(m))          # e.g. ("pod", "data")
+    return P(*out)
+
+
+def shardings_for(axes_tree, ctx: MeshCtx, shapes_tree=None,
+                  serve: bool = False):
+    """Map a logical-axes pytree (tuples as leaves) to NamedShardings.
+
+    When ``shapes_tree`` (matching tree of ShapeDtypeStructs/arrays) is
+    given, any dim whose size is not divisible by its assigned mesh axes is
+    left replicated (e.g. mamba2's concatenated in_proj output dim)."""
+    def spec_leaf(axes):
+        return spec_for(axes, ctx, serve)
+
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda a: NamedSharding(ctx.mesh, spec_leaf(a)), axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    def leaf(axes, shaped):
+        spec = list(spec_leaf(axes))
+        for i, m in enumerate(spec):
+            if m is None:
+                continue
+            names = m if isinstance(m, tuple) else (m,)
+            n = 1
+            for nm in names:
+                n *= int(ctx.mesh.shape[nm])
+            if shaped.shape[i] % n != 0:
+                spec[i] = None
+        return NamedSharding(ctx.mesh, P(*spec))
+
+    return jax.tree.map(leaf, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,89 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints are mesh-agnostic (logical-axes metadata travels in the spec
+system, not the files), so rescaling is: build the new mesh, re-derive
+shardings from the logical axes, and ``restore_checkpoint`` with the new
+shardings — each host loads only the shards it owns (here: device_put of
+full arrays; a multi-host deployment plugs per-shard reads into the same
+interface).
+
+MoE caveat (DESIGN.md §4): expert weights are stored in the *physical*
+EP(+TP) layout (M, e_loc, D, F/tpi), which depends on the model-axis size.
+``relayout_moe`` converts between physical layouts through the logical
+(E, D, F) form; it is applied automatically when the model-axis size
+changes between save and restore.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models.layers import moe_topology
+
+
+def relayout_moe(w: np.ndarray, n_experts: int, m_from: int, m_to: int,
+                 down_proj: bool) -> np.ndarray:
+    """(M1, e_loc1, A, B1) -> (M2, e_loc2, A, B2) through logical (E, A, F).
+
+    For wg/wu the split dim is the last (F); for wd (down_proj) the split
+    dim is axis 2."""
+    ep1, tpi1, el1 = moe_topology(n_experts, m_from)
+    ep2, tpi2, el2 = moe_topology(n_experts, m_to)
+    M1, e_loc1 = w.shape[0], w.shape[1]
+    assert (M1, e_loc1) == (ep1 * tpi1, el1)
+
+    if down_proj:
+        # (M1, el1, Ft1, D): logical (E, F, D)
+        Ft1, D = w.shape[2], w.shape[3]
+        F = Ft1 * tpi1
+        # physical -> logical: m = g*tpi1 + h holds expert g*el1+slot,
+        # F rows [h*Ft1:(h+1)*Ft1]
+        logical = np.zeros((n_experts, F, D), w.dtype)
+        for m in range(M1):
+            g, h = divmod(m, tpi1)
+            for s in range(el1):
+                logical[g * el1 + s, h * Ft1:(h + 1) * Ft1] = w[m, s]
+        Ft2 = F // tpi2
+        out = np.zeros((ep2 * tpi2, el2, Ft2, D), w.dtype)
+        for m in range(ep2 * tpi2):
+            g, h = divmod(m, tpi2)
+            for s in range(el2):
+                out[m, s] = logical[g * el2 + s, h * Ft2:(h + 1) * Ft2]
+        return out
+
+    # (M1, el1, D, Ft1): logical (E, D, F)
+    D, Ft1 = w.shape[2], w.shape[3]
+    F = Ft1 * tpi1
+    logical = np.zeros((n_experts, D, F), w.dtype)
+    for m in range(M1):
+        g, h = divmod(m, tpi1)
+        for s in range(el1):
+            logical[g * el1 + s, :, h * Ft1:(h + 1) * Ft1] = w[m, s]
+    Ft2 = F // tpi2
+    out = np.zeros((ep2 * tpi2, el2, D, Ft2), w.dtype)
+    for m in range(ep2 * tpi2):
+        g, h = divmod(m, tpi2)
+        for s in range(el2):
+            out[m, s] = logical[g * el2 + s, :, h * Ft2:(h + 1) * Ft2]
+    return out
+
+
+def rescale_state(state_np, cfg, m_from: int, m_to: int):
+    """Relayout every MoE leaf of a host-side state pytree for a new
+    model-axis size (no-op for dense archs or unchanged meshes)."""
+    if m_from == m_to or not cfg.n_experts:
+        return state_np
+
+    def visit(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if any(k in ("wg", "wu", "wd") for k in keys) and "moe" in str(keys):
+            down = "wd" in keys
+            stacked = leaf.ndim == 5          # scanned layer stack
+            if stacked:
+                return np.stack([
+                    relayout_moe(leaf[i], cfg.n_experts, m_from, m_to, down)
+                    for i in range(leaf.shape[0])])
+            return relayout_moe(leaf, cfg.n_experts, m_from, m_to, down)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, state_np)

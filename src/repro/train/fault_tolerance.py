@@ -1,0 +1,114 @@
+"""Fault-tolerance machinery: heartbeats, straggler detection, restart
+policy. (Single-host simulable; the interfaces are what a 1000-node
+deployment wires to its cluster scheduler — see DESIGN.md §8.)
+
+* ``HeartbeatMonitor`` — per-host step heartbeats; hosts whose last beat
+  lags the median by more than ``straggler_factor`` x the median step time
+  are flagged stragglers; hosts silent for ``dead_after`` are dead =>
+  the driver triggers checkpoint-restore-rescale (elastic path).
+* ``StepGuard`` — wall-clock watchdog around train steps: a hung collective
+  (the most common 1000-node failure mode) trips the timeout and raises,
+  letting the runner restart from the last checkpoint instead of wedging.
+* ``RestartPolicy`` — exponential backoff with a budget.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class HostState:
+    last_beat: float = 0.0
+    last_step: int = -1
+    step_times: list = field(default_factory=list)
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, straggler_factor: float = 2.0,
+                 dead_after: float = 60.0):
+        self.hosts = {h: HostState() for h in range(n_hosts)}
+        self.straggler_factor = straggler_factor
+        self.dead_after = dead_after
+        self._lock = threading.Lock()
+
+    def beat(self, host: int, step: int, now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            hs = self.hosts[host]
+            if hs.last_step >= 0 and step > hs.last_step:
+                hs.step_times.append((now - hs.last_beat)
+                                     / max(step - hs.last_step, 1))
+                hs.step_times = hs.step_times[-32:]
+            hs.last_beat, hs.last_step = now, step
+
+    def _median_step_time(self) -> float:
+        times = [t for hs in self.hosts.values() for t in hs.step_times]
+        if not times:
+            return 0.0
+        times.sort()
+        return times[len(times) // 2]
+
+    def stragglers(self, now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        med = self._median_step_time()
+        if med <= 0:
+            return []
+        out = []
+        with self._lock:
+            min_step = min(hs.last_step for hs in self.hosts.values())
+            for h, hs in self.hosts.items():
+                lag = now - hs.last_beat
+                if hs.last_step <= min_step and lag > self.straggler_factor * med:
+                    out.append(h)
+        return out
+
+    def dead(self, now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            return [h for h, hs in self.hosts.items()
+                    if now - hs.last_beat > self.dead_after]
+
+
+class StepGuard:
+    """Watchdog: ``with StepGuard(timeout):`` raises if the step hangs."""
+
+    class Hang(RuntimeError):
+        pass
+
+    def __init__(self, timeout: float):
+        self.timeout = timeout
+        self._done = threading.Event()
+        self._hung = False
+
+    def __enter__(self):
+        def watch():
+            if not self._done.wait(self.timeout):
+                self._hung = True
+        self._t = threading.Thread(target=watch, daemon=True)
+        self._t.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._done.set()
+        self._t.join(timeout=0.1)
+        if self._hung and exc[0] is None:
+            raise StepGuard.Hang(f"step exceeded {self.timeout}s")
+        return False
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 5
+    backoff_base: float = 1.0
+    backoff_cap: float = 60.0
+    restarts: int = 0
+
+    def next_delay(self) -> float | None:
+        """None => budget exhausted (surface to the operator)."""
+        if self.restarts >= self.max_restarts:
+            return None
+        d = min(self.backoff_base * (2 ** self.restarts), self.backoff_cap)
+        self.restarts += 1
+        return d

@@ -1,0 +1,118 @@
+"""Tests for the vectorized JAX lock-performance machine (core.sim).
+
+Validates machine-level invariants and the paper's quantitative claims:
+* lost-update freedom: the shared CS word's final value equals completed
+  episodes (mutual exclusion at machine level),
+* Table 1: misses/episode == 4 (Reciprocating) and 5 (CLH), constant in T;
+  Ticket's scales with T (global spinning),
+* Fig. 1 ordering at high contention: Reciprocating beats MCS/CLH/Ticket,
+* bounded bypass on the machine's admission log.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.locks.programs import PROGRAMS
+from repro.core.sim.api import bench_lock
+from repro.core.sim.machine import CostModel, run_machine
+
+ALGS = sorted(PROGRAMS)
+
+
+@pytest.mark.parametrize("name", ALGS)
+def test_no_lost_updates(name):
+    """With a shared-PRNG CS, mem[CS] must equal completed episodes
+    (within the <=T threads still inside at the horizon)."""
+    T = 6
+    prog = PROGRAMS[name](T, ncs_max=0, cs_shared=True)
+    s = jax.jit(lambda: run_machine(prog, T, 8000, CostModel()))()
+    cs_val = int(s.mem[4])
+    eps = int(s.episodes.sum())
+    assert eps > 50, f"{name}: no progress"
+    assert eps - T <= cs_val <= eps + T, (name, cs_val, eps)
+
+
+@pytest.mark.parametrize("name,expect", [("reciprocating", 4), ("clh", 5)])
+def test_table1_misses_per_episode(name, expect):
+    """Paper Table 1 / §8(C): coherence misses per contended episode."""
+    r = bench_lock(name, 10, n_steps=20_000, cs_shared=False,
+                   cost=CostModel(n_nodes=1), n_replicas=2)
+    assert abs(r.miss_per_episode - expect) < 0.35, r.miss_per_episode
+
+
+def test_ticket_misses_scale_with_threads():
+    r4 = bench_lock("ticket", 4, n_steps=12_000, cs_shared=False,
+                    cost=CostModel(n_nodes=1), n_replicas=2)
+    r12 = bench_lock("ticket", 12, n_steps=30_000, cs_shared=False,
+                     cost=CostModel(n_nodes=1), n_replicas=2)
+    assert r12.miss_per_episode > r4.miss_per_episode + 4   # O(T) growth
+
+
+def test_queue_locks_constant_misses():
+    for name in ("reciprocating", "clh", "mcs"):
+        r4 = bench_lock(name, 4, n_steps=12_000, cs_shared=False,
+                        cost=CostModel(n_nodes=1), n_replicas=2)
+        r12 = bench_lock(name, 12, n_steps=30_000, cs_shared=False,
+                         cost=CostModel(n_nodes=1), n_replicas=2)
+        assert abs(r12.miss_per_episode - r4.miss_per_episode) < 1.0, name
+
+
+def test_fig1_throughput_ordering_high_contention():
+    """At T=16 under maximal contention, Reciprocating leads; Ticket and
+    TTAS trail the queue locks (paper Fig. 1a)."""
+    res = {n: bench_lock(n, 16, n_steps=30_000, n_replicas=2)
+           for n in ("reciprocating", "mcs", "clh", "ticket", "ttas")}
+    thr = {n: r.throughput for n, r in res.items()}
+    assert thr["reciprocating"] > thr["mcs"]
+    assert thr["reciprocating"] > thr["clh"]
+    assert thr["reciprocating"] > thr["ticket"] * 1.5
+    assert min(thr["mcs"], thr["clh"]) > thr["ttas"]
+
+
+def test_machine_admission_fairness_bound():
+    """Paper §9.2: under sustained contention the admission schedule is
+    bimodal with worst-case 2x long-term unfairness; and no thread starves
+    (every thread appears regularly in the admission log).
+
+    (The strict bounded-bypass <=1 property is op-level verified in
+    test_lock_properties.py; on the *timed* machine a releasing thread pays
+    ~3 miss latencies before re-arriving, so admission gaps of 3-4 between
+    its turns are legitimate, not bypasses.)"""
+    T = 6
+    prog = PROGRAMS["reciprocating"](T, ncs_max=0, cs_shared=False)
+    s = jax.jit(lambda: run_machine(prog, T, 30_000, CostModel()))()
+    log = np.asarray(s.adm_log)
+    cnt = int(s.adm_cnt)
+    assert cnt >= len(log)          # ring filled
+    seq = log.tolist()
+    counts = [seq.count(t) for t in range(T)]
+    assert min(counts) > 0
+    assert max(counts) / min(counts) <= 2.5     # ~2x bimodal (§9.2)
+    # anti-starvation: max gap between consecutive turns of any thread is
+    # bounded by a small multiple of the population
+    for t in range(T):
+        idx = [i for i, x in enumerate(seq) if x == t]
+        gaps = [b - a for a, b in zip(idx, idx[1:])]
+        assert max(gaps) <= 4 * T, (t, max(gaps))
+
+
+def test_numa_remote_misses():
+    """Reciprocating's remote misses/episode stay ~2 (Table 1: xchg on the
+    lock word + handoff store); Ticket's scale with threads."""
+    rl = bench_lock("reciprocating", 12, n_steps=30_000, cs_shared=False,
+                    cost=CostModel(n_nodes=2), n_replicas=2)
+    tk = bench_lock("ticket", 12, n_steps=30_000, cs_shared=False,
+                    cost=CostModel(n_nodes=2), n_replicas=2)
+    assert rl.remote_per_episode < 3.0
+    assert tk.remote_per_episode > rl.remote_per_episode + 2
+
+
+def test_uncontended_latency():
+    """Single thread: every algorithm completes episodes without misses
+    beyond the first (everything stays in its cache)."""
+    for name in ALGS:
+        r = bench_lock(name, 1, n_steps=4000, n_replicas=1,
+                       cost=CostModel(n_nodes=1))
+        assert r.episodes > 100, name
+        assert r.miss_per_episode < 0.5, (name, r.miss_per_episode)
