@@ -1,38 +1,16 @@
-"""std::atomic<struct> analogue (paper Figure 2).
+"""std::atomic<struct> analogue (paper Figure 2): "lock; copy struct;
+unlock" at maximal contention — the machine's shared-rw CS profile.
 
-The C++ runtime implements atomic ops on a 20-byte struct by hashing the
-address into a mutex table and taking the covering lock; the measured
-workload is therefore "lock; copy struct; unlock" at maximal contention —
-exactly our machine's shared-rw CS profile with an empty NCS. The
-CAS-retry variant (Fig. 2b) adds an optimistic outer retry: modeled by the
-same lock path with a small extra local verify cost.
+Shim over the registered ``atomics`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite atomics``.
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, emit, save
-from repro.core.sim.api import bench_lock
-from repro.core.sim.machine import CostModel
-
-ALGS = ("reciprocating", "ticket", "mcs", "clh", "hemlock", "ttas")
-THREADS = (1, 2, 4, 8, 16, 24)
+from benchmarks.common import run_suite_main
 
 
 def main() -> dict:
-    rows = {}
-    for alg in ALGS:
-        series = []
-        for t in THREADS:
-            cost = CostModel(n_nodes=2 if t > 8 else 1)
-            with Timer() as tm:
-                r = bench_lock(alg, t, n_steps=20_000, ncs_max=0,
-                               cs_shared="rw", cost=cost, n_replicas=2)
-            series.append({"threads": t, "throughput": r.throughput})
-            emit(f"atomics_xchg/{alg}/T{t}",
-                 tm.dt / max(r.episodes, 1) * 1e6,
-                 f"thr={r.throughput:.3f}/kcyc")
-        rows[alg] = series
-    save("fig2_atomics", rows)
-    return rows
+    return run_suite_main("atomics", artifact="fig2_atomics")
 
 
 if __name__ == "__main__":

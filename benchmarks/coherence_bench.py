@@ -1,37 +1,16 @@
-"""Table 1 reproduction: coherence traffic per contended episode.
+"""Table 1 reproduction: coherence traffic per contended episode
+(degenerate local CS, sustained contention).
 
-Degenerate local CS (the paper's l2d_cache_inval experiment), T=10,
-sustained contention. Paper's numbers: Reciprocating 4 (invalidations),
-CLH 5, MCS 6, Ticket ~T; max remote misses RL=2.
+Shim over the registered ``coherence`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite coherence``.
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, emit, save
-from repro.core.sim.api import bench_lock
-from repro.core.sim.machine import CostModel
-
-PAPER = {"reciprocating": 4, "clh": 5, "mcs": 6, "hemlock": 5,
-         "ticket": 10, "anderson": None, "ttas": None, "retrograde": None}
+from benchmarks.common import run_suite_main
 
 
 def main() -> dict:
-    out = {}
-    for alg, paper_val in PAPER.items():
-        with Timer() as tm:
-            r = bench_lock(alg, 10, n_steps=24_000, cs_shared=False,
-                           cost=CostModel(n_nodes=1), n_replicas=2)
-            r2 = bench_lock(alg, 10, n_steps=24_000, cs_shared=False,
-                            cost=CostModel(n_nodes=2), n_replicas=2)
-        out[alg] = {
-            "miss_per_episode": round(r.miss_per_episode, 2),
-            "inval_per_episode": round(r.inval_per_episode, 2),
-            "remote_per_episode_numa": round(r2.remote_per_episode, 2),
-            "paper_invalidations": paper_val,
-        }
-        emit(f"coherence/{alg}", tm.dt / max(r.episodes, 1) * 1e6,
-             f"miss/ep={r.miss_per_episode:.2f} paper={paper_val}")
-    save("table1_coherence", out)
-    return out
+    return run_suite_main("coherence", artifact="table1_coherence")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,13 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the legacy benchmark shims.
+
+The benchmark logic itself lives in ``repro.bench`` (registry-driven
+suites); every ``benchmarks/*_bench.py`` script is now a thin shim that
+runs its registered suite and drops the result document in
+``benchmarks/artifacts/``. Artifact *paths* are kept, but payloads are now
+full ``repro.bench/v1`` documents (the old ad-hoc row dicts are gone, and
+``mutexbench`` saves one document instead of the two per-figure files).
+Set ``REPRO_BENCH_QUICK=1`` to shrink the grids for smoke runs.
+"""
 from __future__ import annotations
 
 import json
@@ -25,3 +34,14 @@ class Timer:
 
     def __exit__(self, *a):
         self.dt = time.time() - self.t0
+
+
+def run_suite_main(suite: str, artifact: str | None = None) -> dict:
+    """Run a registered ``repro.bench`` suite and save its result document
+    as a legacy artifact. Returns the document."""
+    from repro.bench import BenchConfig, run_suite
+    quick = os.environ.get("REPRO_BENCH_QUICK", "").strip().lower()
+    cfg = BenchConfig(quick=quick in ("1", "true", "yes", "on"))
+    doc = run_suite(suite, cfg)
+    save(artifact or suite, doc)
+    return doc

@@ -1,61 +1,16 @@
-"""Fairness / palindromic-schedule benchmarks (paper §9, Table 2).
+"""Fairness / palindromic-schedule benchmarks (paper §9, Table 2) plus
+bounded-bypass histograms over the ``core.admission`` policies.
 
-* Table-2 cycle detection on the reference interleaver (exact) and on the
-  timed machine's admission log.
-* Long-term unfairness (max/min episodes): reciprocating ~2x bimodal;
-  ticket ~1x; the §9.4 mitigation restores ~1x while preserving segments.
+Shim over the registered ``fairness`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite fairness``.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Timer, emit, save
-from repro.core.locks.reference import ALGORITHMS
-from repro.core.sim.api import bench_lock
-from repro.core.sim.interleave import run as ref_run
-from repro.core.admission import ReciprocatingQueue
-
-
-def admission_unfairness_mitigated(seed: int = 0, n: int = 4000) -> float:
-    """§9.4: random-without-replacement intra-segment order."""
-    q = ReciprocatingQueue(seed, mitigate=True)
-    rng = np.random.default_rng(seed)
-    counts = np.zeros(5, int)
-    live = []
-    for i in range(n):
-        tid = i % 5
-        q.push(tid)
-        got = q.pop()
-        if got is not None:
-            counts[got] += 1
-    return float(counts.max() / max(counts.min(), 1))
+from benchmarks.common import run_suite_main
 
 
 def main() -> dict:
-    out = {}
-    with Timer() as tm:
-        r = ref_run(ALGORITHMS["reciprocating"](5), 5, n_ops=8000,
-                    policy="rr")
-    cyc = r.cycle()
-    out["table2_cycle"] = cyc
-    out["table2_cycle_str"] = "".join("ABCDE"[t] for t in cyc) if cyc else None
-    out["table2_counts"] = sorted(cyc.count(t) for t in range(5)) if cyc else None
-    out["ref_unfairness"] = r.unfairness()
-    emit("fairness/table2_cycle", tm.dt * 1e6 / 8000,
-         f"cycle={out['table2_cycle_str']} unfair={r.unfairness():.2f}")
-
-    machine = {}
-    for alg in ("reciprocating", "ticket", "retrograde"):
-        b = bench_lock(alg, 5, n_steps=20_000, n_replicas=2)
-        machine[alg] = round(b.unfairness, 3)
-        emit(f"fairness/machine_{alg}", 0.0, f"unfair={b.unfairness:.2f}")
-    out["machine_unfairness"] = machine
-
-    out["mitigated_unfairness"] = round(admission_unfairness_mitigated(), 3)
-    emit("fairness/mitigated", 0.0,
-         f"unfair={out['mitigated_unfairness']:.2f}")
-    save("fairness", out)
-    return out
+    return run_suite_main("fairness")
 
 
 if __name__ == "__main__":

@@ -1,43 +1,16 @@
-"""Kernel benchmarks: serpentine-vs-ascending structural DMA accounting for
-the assigned architectures' attention shapes, plus interpret-mode
-correctness timing (wall time on CPU interpret is NOT a TPU metric — the
-HBM-bytes column is the roofline-relevant output)."""
+"""Kernel benchmarks: serpentine-vs-ascending structural DMA accounting
+for the assigned architectures' attention shapes.
+
+Shim over the registered ``kernels`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite kernels``.
+"""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Timer, emit, save
-from repro.configs import get_config
-from repro.kernels.flash_attention import serpentine_savings
-
-# representative (arch, Sq, Sk, block) attention instances
-CASES = [
-    ("granite-3-2b", 4096, 4096, 128),
-    ("mixtral-8x7b", 4096, 4096, 128),       # sliding window handled in-mask
-    ("starcoder2-7b", 32768, 32768, 256),
-    ("deepseek-v2-236b", 4096, 4096, 128),
-    ("whisper-large-v3", 4096, 1536, 128),
-]
+from benchmarks.common import run_suite_main
 
 
 def main() -> dict:
-    out = {}
-    for arch, sq, sk, blk in CASES:
-        cfg = get_config(arch)
-        n_q, n_kv = sq // blk, sk // blk
-        s = serpentine_savings(n_q, n_kv)
-        kv_heads = max(cfg.n_kv_heads, 1)
-        block_bytes = blk * cfg.hd * 2 * 2            # k+v, bf16
-        saved = (s["ascending"] - s["serpentine"]) * block_bytes * kv_heads
-        out[arch] = {
-            "grid": [n_q, n_kv], **s,
-            "hbm_bytes_saved_per_batch_row": int(saved),
-        }
-        emit(f"kernel/serpentine/{arch}", 0.0,
-             f"saved={s['saved_fraction']*100:.1f}% of KV fetches "
-             f"({saved/1e6:.2f} MB/row)")
-    save("kernel_serpentine", out)
-    return out
+    return run_suite_main("kernels", artifact="kernel_serpentine")
 
 
 if __name__ == "__main__":

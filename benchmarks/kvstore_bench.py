@@ -1,36 +1,16 @@
-"""LevelDB-readrandom analogue (paper Figure 3).
+"""LevelDB-readrandom analogue (paper Figure 3): coarse lock over
+read-only lookups, random key-gen NCS.
 
-Coarse-grained lock protecting a KV store: CS = read-only lookups (two
-shared-line loads — reads keep lines Shared, so the handoff dominates);
-NCS = key generation + hashing (random local work). Thread sweep mirrors
-Fig. 3's shape.
+Shim over the registered ``kvstore`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite kvstore``.
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, emit, save
-from repro.core.sim.api import bench_lock
-from repro.core.sim.machine import CostModel
-
-ALGS = ("reciprocating", "ticket", "mcs", "clh", "hemlock")
-THREADS = (1, 2, 4, 8, 16, 24)
+from benchmarks.common import run_suite_main
 
 
 def main() -> dict:
-    rows = {}
-    for alg in ALGS:
-        series = []
-        for t in THREADS:
-            cost = CostModel(n_nodes=2 if t > 8 else 1)
-            with Timer() as tm:
-                r = bench_lock(alg, t, n_steps=20_000, ncs_max=60,
-                               cs_shared="ro", cost=cost, n_replicas=2)
-            series.append({"threads": t, "throughput": r.throughput,
-                           "latency": r.latency})
-            emit(f"kvstore/{alg}/T{t}", tm.dt / max(r.episodes, 1) * 1e6,
-                 f"thr={r.throughput:.3f}/kcyc")
-        rows[alg] = series
-    save("fig3_kvstore", rows)
-    return rows
+    return run_suite_main("kvstore", artifact="fig3_kvstore")
 
 
 if __name__ == "__main__":

@@ -1,61 +1,15 @@
 """MutexBench — paper Figure 1 (a: maximal contention, b: random NCS).
 
-Thread sweep x lock algorithm on the JAX coherence machine; reports
-aggregate throughput (episodes per kilocycle), misses/episode and
-fairness. NUMA onset is modeled at >half the thread sweep (2 nodes),
-mirroring the paper's 2-socket X5-2 where threads spill to the second
-socket above 18.
+Shim over the registered ``mutexbench`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite mutexbench``.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Timer, emit, save
-from repro.core.sim.api import bench_lock
-from repro.core.sim.machine import CostModel
-
-ALGS = ("reciprocating", "ticket", "mcs", "clh", "hemlock", "ttas",
-        "anderson", "retrograde")
-THREADS = (1, 2, 4, 8, 16, 24, 32)
-
-
-def run_figure(ncs_max: int, tag: str, n_steps: int = 24_000) -> dict:
-    rows = {}
-    for alg in ALGS:
-        series = []
-        for t in THREADS:
-            cost = CostModel(n_nodes=2 if t > 8 else 1)
-            with Timer() as tm:
-                r = bench_lock(alg, t, n_steps=n_steps, ncs_max=ncs_max,
-                               cost=cost, n_replicas=2)
-            series.append({
-                "threads": t, "throughput": r.throughput,
-                "miss_per_episode": r.miss_per_episode,
-                "latency": r.latency, "unfairness": r.unfairness,
-                "wall_s": round(tm.dt, 2),
-            })
-            emit(f"mutexbench_{tag}/{alg}/T{t}",
-                 tm.dt / max(r.episodes, 1) * 1e6,
-                 f"thr={r.throughput:.3f}/kcyc miss/ep={r.miss_per_episode:.2f}")
-        rows[alg] = series
-    save(f"mutexbench_{tag}", rows)
-    return rows
+from benchmarks.common import run_suite_main
 
 
 def main() -> dict:
-    fig1a = run_figure(ncs_max=0, tag="max_contention")
-    fig1b = run_figure(ncs_max=250, tag="random_ncs")
-
-    # headline check mirroring the paper's conclusions at high contention
-    t = THREADS[-2]
-    idx = THREADS.index(t)
-    rl = fig1a["reciprocating"][idx]["throughput"]
-    rank = {a: fig1a[a][idx]["throughput"] for a in ALGS}
-    best = max(rank, key=rank.get)
-    print(f"# Fig1a @T={t}: best={best} "
-          f"(reciprocating {'WINS' if best == 'reciprocating' else 'loses'};"
-          f" {rl:.3f}/kcyc)")
-    return {"fig1a": fig1a, "fig1b": fig1b}
+    return run_suite_main("mutexbench")
 
 
 if __name__ == "__main__":

@@ -1,68 +1,16 @@
-"""App. C reproduction: palindromic schedules and residual cache residency.
+"""App. C reproduction: palindromic schedules and residual cache
+residency (Jensen/decay model).
 
-Model: T parties share an LLC; while a party waits, its residency decays
-exponentially (half-life lambda). Aggregate residual residency at service
-time under FIFO round-robin vs the palindrome (sawtooth) schedule: Jensen's
-inequality (Residual is convex in the waiting gap) => palindrome >= FIFO
-for EVERY party, with disparity across parties (the paper's second-order
-unfairness). Also computes the serving-scheduler analogue numbers.
+Shim over the registered ``residency`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite residency``.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import emit, save
-
-
-def schedule_residency(schedule: list[int], n: int, lam: float,
-                       cycles: int = 200) -> np.ndarray:
-    """Mean residual residency exp(-gap*lam) per party under a repeating
-    admission schedule."""
-    last = {t: None for t in range(n)}
-    acc = {t: [] for t in range(n)}
-    step = 0
-    for _ in range(cycles):
-        for t in schedule:
-            if last[t] is not None:
-                acc[t].append(np.exp(-(step - last[t]) * lam))
-            last[t] = step
-            step += 1
-    return np.array([np.mean(acc[t]) for t in range(n)])
+from benchmarks.common import run_suite_main
 
 
 def main() -> dict:
-    n, lam = 5, 0.15
-    fifo = list(range(n))                        # ABCDE ABCDE
-    # App. C analyzes the true palindrome ABCDE-EDCBA: every party served
-    # exactly twice per period (same frequency as FIFO), gaps alternate
-    # short/long around the same mean -> Jensen gives >= residency for all.
-    palin = list(range(n)) + list(reversed(range(n)))
-    r_fifo = schedule_residency(fifo, n, lam)
-    r_palin = schedule_residency(palin, n, lam)
-    out = {
-        "lambda": lam,
-        "fifo_mean": float(r_fifo.mean()),
-        "palindrome_mean": float(r_palin.mean()),
-        "fifo_per_party": [round(float(x), 4) for x in r_fifo],
-        "palindrome_per_party": [round(float(x), 4) for x in r_palin],
-        "palindrome_wins": bool(r_palin.mean() >= r_fifo.mean()),
-        "per_party_never_worse": bool((r_palin >= r_fifo - 1e-12).all()),
-        "disparity_palindrome": float(r_palin.max() / r_palin.min()),
-    }
-    emit("residency/jensen", 0.0,
-         f"palin={out['palindrome_mean']:.4f} fifo={out['fifo_mean']:.4f} "
-         f"wins={out['palindrome_wins']}")
-
-    # sweep decay rates: the palindrome advantage is monotone in lambda
-    sweep = {}
-    for lam in (0.02, 0.05, 0.1, 0.2, 0.4):
-        a = schedule_residency(palin, n, lam).mean()
-        b = schedule_residency(fifo, n, lam).mean()
-        sweep[lam] = {"palindrome": float(a), "fifo": float(b),
-                      "advantage": float(a / b)}
-    out["sweep"] = sweep
-    save("appc_residency", out)
-    return out
+    return run_suite_main("residency", artifact="appc_residency")
 
 
 if __name__ == "__main__":

@@ -1,72 +1,19 @@
-"""Roofline report: aggregates the dry-run artifacts into the
-EXPERIMENTS.md §Roofline table (single-pod per the assignment; multi-pod
-proves the pod axis shards)."""
+"""Roofline report: aggregates the ``repro.launch.dryrun`` artifacts into
+the EXPERIMENTS §Roofline table.
+
+Shim over the registered ``roofline`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite roofline``.
+"""
 from __future__ import annotations
 
-import glob
-import json
 import os
 
-from benchmarks.common import ART, emit, save
-
-
-def load_cells(mesh: str = "single") -> list[dict]:
-    cells = []
-    for f in sorted(glob.glob(os.path.join(ART, f"dryrun_*_{mesh}.json"))):
-        d = json.load(open(f))
-        if d.get("status") == "ok":
-            cells.append(d)
-    return cells
-
-
-def table(mesh: str = "single") -> list[dict]:
-    rows = []
-    for d in load_cells(mesh):
-        t = d["roofline_seconds"]
-        total = max(sum(t.values()), 1e-12)
-        bound = max(t.values())
-        rows.append({
-            "arch": d["arch"], "shape": d["shape"],
-            "compute_ms": round(t["compute"] * 1e3, 2),
-            "memory_ms": round(t["memory"] * 1e3, 2),
-            "collective_ms": round(t["collective"] * 1e3, 2),
-            "dominant": d["dominant"],
-            "roofline_fraction": round(t["compute"] / bound, 4),
-            "useful_flop_ratio": round(d["useful_flop_ratio"], 4),
-            "peak_gb": round(d["peak_bytes_per_device"] / 1e9, 2),
-            "fits_16gb": d["fits_16gb"],
-        })
-    return rows
-
-
-def markdown(rows: list[dict]) -> str:
-    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
-           "dominant | roofline frac | useful flops | peak GB | fits |")
-    sep = "|" + "---|" * 10
-    lines = [hdr, sep]
-    for r in rows:
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | "
-            f"{r['memory_ms']} | {r['collective_ms']} | {r['dominant']} | "
-            f"{r['roofline_fraction']} | {r['useful_flop_ratio']} | "
-            f"{r['peak_gb']} | {'Y' if r['fits_16gb'] else 'N'} |")
-    return "\n".join(lines)
+from benchmarks.common import ART, run_suite_main
 
 
 def main() -> dict:
-    rows = table("single")
-    save("roofline_table", rows)
-    with open(os.path.join(ART, "roofline_table.md"), "w") as f:
-        f.write(markdown(rows) + "\n")
-    for r in rows:
-        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
-             f"dom={r['dominant']} frac={r['roofline_fraction']} "
-             f"fits={r['fits_16gb']}")
-    n_ok = len(rows)
-    multi = load_cells("multi")
-    print(f"# roofline: {n_ok} single-pod cells, {len(multi)} multi-pod "
-          f"cells compiled OK")
-    return {"rows": rows}
+    os.environ.setdefault("REPRO_BENCH_ARTIFACTS", ART)
+    return run_suite_main("roofline", artifact="roofline_table")
 
 
 if __name__ == "__main__":

@@ -1,51 +1,46 @@
-"""Benchmark harness entry point: one section per paper table/figure.
+"""Legacy benchmark driver — now a shim over the ``repro.bench`` CLI.
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME]]``
-prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts to
-``benchmarks/artifacts/``.
+``PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME]]`` runs the
+named suites (default: all legacy sections) through the registry, printing
+the historical ``name,us_per_call,derived`` CSV rows and writing each
+suite's result document to ``benchmarks/artifacts/``.
 
-Sections -> paper artifacts:
-  mutexbench   Fig. 1a/1b  (thread sweep, maximal contention + random NCS)
-  atomics      Fig. 2      (lock-striped std::atomic<struct>)
-  kvstore      Fig. 3      (LevelDB readrandom analogue, read-only CS)
-  coherence    Table 1     (invalidations / misses per episode)
-  fairness     Table 2/§9  (palindromic cycle, 2x bound, §9.4 mitigation)
-  residency    App. C      (Jensen/decay model)
-  scheduler    (beyond-paper) reciprocating continuous-batching admission
-  kernels      (beyond-paper) serpentine DMA savings
-  roofline     §Roofline   (dry-run artifact aggregation)
+Prefer the first-class CLI::
+
+    PYTHONPATH=src python -m repro.bench run --suite paper \\
+        --out BENCH_paper.json
 """
 from __future__ import annotations
 
 import argparse
-import sys
+
+from benchmarks.common import run_suite_main
+
+# legacy section name -> (suite, artifact name)
+SECTIONS = {
+    "coherence": ("coherence", "table1_coherence"),
+    "fairness": ("fairness", "fairness"),
+    "residency": ("residency", "appc_residency"),
+    "kernels": ("kernels", "kernel_serpentine"),
+    "scheduler": ("scheduler", "scheduler_policies"),
+    "kvstore": ("kvstore", "fig3_kvstore"),
+    "atomics": ("atomics", "fig2_atomics"),
+    "mutexbench": ("mutexbench", "mutexbench"),
+    "roofline": ("roofline", "roofline_table"),
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     args = ap.parse_args()
-
-    from benchmarks import (atomics_bench, coherence_bench, fairness_bench,
-                            kernel_bench, kvstore_bench, mutexbench,
-                            residency_bench, roofline, scheduler_bench)
-    sections = {
-        "coherence": coherence_bench.main,
-        "fairness": fairness_bench.main,
-        "residency": residency_bench.main,
-        "kernels": kernel_bench.main,
-        "scheduler": scheduler_bench.main,
-        "kvstore": kvstore_bench.main,
-        "atomics": atomics_bench.main,
-        "mutexbench": mutexbench.main,
-        "roofline": roofline.main,
-    }
     chosen = ([s for s in args.only.split(",") if s] if args.only
-              else list(sections))
+              else list(SECTIONS))
     print("name,us_per_call,derived")
     for name in chosen:
+        suite, artifact = SECTIONS[name]
         print(f"# === {name} ===", flush=True)
-        sections[name]()
+        run_suite_main(suite, artifact=artifact)
 
 
 if __name__ == "__main__":

@@ -1,60 +1,17 @@
 """Serving-scheduler benchmark: reciprocating admission vs FIFO vs LIFO
 (beyond-paper systems adaptation, DESIGN.md §L3).
 
-Workload: Poisson arrivals of requests drawn from shared-prefix families;
-fixed KV-block pool with LRU decay. Metrics: prefix-cache hit rate,
-throughput, p50/p99 queueing wait (LIFO's starvation shows in p99).
+Shim over the registered ``scheduler`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite scheduler``.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Timer, emit, save
-from repro.serve.scheduler import ContinuousBatcher, Request
-
-
-def drive(policy: str, *, n_req: int = 600, mean_gap: float = 14.0,
-          families: int = 64, pool: int = 96, seed: int = 0) -> dict:
-    """Bursty shared-prefix workload: a family arrives as a burst of 2-6
-    requests close together (users iterating on one prompt) — the regime
-    where admission order interacts with prefix residency."""
-    sched = ContinuousBatcher(policy=policy, max_batch=4, pool_blocks=pool,
-                              seed=seed)
-    rng = np.random.default_rng(seed)
-    t, i = 0.0, 0
-    while i < n_req:
-        t += float(rng.exponential(mean_gap))
-        fam = int(rng.integers(0, families))
-        for _ in range(int(rng.integers(2, 7))):
-            if i >= n_req:
-                break
-            sched.submit(Request(rid=i, arrival=t + float(rng.exponential(2.0)),
-                                 prefix_id=fam,
-                                 prefix_blocks=16, prompt_blocks=2,
-                                 decode_tokens=int(rng.integers(4, 16))))
-            i += 1
-    sched.drain()
-    return sched.stats.summary()
+from benchmarks.common import run_suite_main
+from repro.bench.suites import scheduler_drive as drive  # noqa: F401
 
 
 def main() -> dict:
-    out = {}
-    for policy in ("fifo", "lifo", "reciprocating",
-                   "reciprocating_mitigated"):
-        agg = {}
-        with Timer() as tm:
-            for seed in range(3):
-                s = drive(policy, seed=seed)
-                for k, v in s.items():
-                    agg.setdefault(k, []).append(v)
-        out[policy] = {k: float(np.mean(v)) for k, v in agg.items()}
-        emit(f"scheduler/{policy}", tm.dt / 3 * 1e6 / 600,
-             f"hit={out[policy]['prefix_hit_rate']:.3f} "
-             f"p99wait={out[policy]['p99_wait']:.1f} "
-             f"maxwait={out[policy]['max_wait']:.0f} "
-             f"thr={out[policy]['throughput_rps']:.3f}")
-    save("scheduler_policies", out)
-    return out
+    return run_suite_main("scheduler", artifact="scheduler_policies")
 
 
 if __name__ == "__main__":

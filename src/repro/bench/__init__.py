@@ -1,0 +1,19 @@
+"""Registry-driven benchmark harness (paper §7 evaluation).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.bench list
+    PYTHONPATH=src python -m repro.bench run --suite paper \\
+        --out BENCH_paper.json          # also renders docs/RESULTS.md
+
+Programmatic::
+
+    from repro.bench import BenchConfig, run_suite
+    doc = run_suite("coherence", BenchConfig(quick=True))
+"""
+from repro.bench.registry import (     # noqa: F401
+    BenchConfig, Suite, get, names, register, run_suite,
+)
+from repro.bench.schema import (       # noqa: F401
+    SCHEMA_VERSION, load_result, save_result, validate_result,
+)

@@ -1,0 +1,166 @@
+"""Command-line interface: ``python -m repro.bench <command>``.
+
+Commands:
+
+* ``list``                      — show the suite catalogue
+* ``run --suite paper --out BENCH_paper.json``
+                                — run a suite, write the schema-valid JSON
+                                  result, and (for the ``paper`` suite, or
+                                  whenever ``--report`` is given) render
+                                  ``docs/RESULTS.md`` from it
+* ``report --in BENCH_paper.json [--out docs/RESULTS.md]``
+                                — re-render markdown from an existing result
+* ``validate --in BENCH_paper.json``
+                                — schema-check a result document
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.bench import registry, report, schema
+
+DEFAULT_REPORT = "docs/RESULTS.md"
+
+
+def _parse_threads(text: str) -> tuple:
+    return tuple(int(t) for t in text.split(",") if t)
+
+
+def _build_config(args) -> registry.BenchConfig:
+    kw = {}
+    if args.threads:
+        threads = _parse_threads(args.threads)
+        bad = [t for t in threads if t < 1]
+        if bad:
+            raise ValueError(f"--threads values must be >= 1, got {bad}")
+        kw["threads"] = threads
+    if args.steps is not None:
+        kw["n_steps"] = args.steps
+    if args.replicas is not None:
+        kw["n_replicas"] = args.replicas
+    if args.algs:
+        from repro.core.locks.programs import PROGRAMS
+        algs = tuple(args.algs.split(","))
+        bad = [a for a in algs if a not in PROGRAMS]
+        if bad:
+            raise ValueError(f"unknown lock program(s) {bad}; "
+                             f"available: {sorted(PROGRAMS)}")
+        kw["algs"] = algs
+    kw["seed0"] = args.seed
+    kw["quick"] = args.quick
+    kw["verbose"] = not args.no_progress
+    return registry.BenchConfig(**kw)
+
+
+def cmd_list(_args) -> int:
+    for name in registry.names():
+        s = registry.get(name)
+        print(f"{name:12s} {s.title}")
+        print(f"{'':12s}   {s.description}")
+    return 0
+
+
+def cmd_run(args) -> int:
+    cfg = _build_config(args)
+    t0 = time.time()
+    if cfg.verbose:
+        print("name,us_per_call,derived")
+        print(f"# === suite {args.suite} ===", flush=True)
+    doc = registry.run_suite(args.suite, cfg)
+    schema.save_result(doc, args.out)
+    print(f"# wrote {args.out} ({len(doc['experiments'])} experiments, "
+          f"{time.time() - t0:.1f}s)")
+    report_path = args.report
+    if report_path is None and args.suite == "paper" and not args.no_report:
+        report_path = DEFAULT_REPORT
+    if report_path:
+        report.write_report(doc, report_path)
+        print(f"# rendered {report_path}")
+    return 0
+
+
+def cmd_report(args) -> int:
+    doc = schema.load_result(args.infile)
+    out = args.out or DEFAULT_REPORT
+    report.write_report(doc, out)
+    print(f"# rendered {out} from {args.infile}")
+    return 0
+
+
+def cmd_validate(args) -> int:
+    import json
+    with open(args.infile) as f:
+        doc = json.load(f)
+    errors = schema.validate_result(doc)
+    if errors:
+        print(f"{args.infile}: INVALID")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"{args.infile}: valid {schema.SCHEMA_VERSION} "
+          f"(suite={doc['suite']}, {len(doc['experiments'])} experiments)")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench",
+        description="Registry-driven benchmark harness (paper Figs 1-3, "
+                    "Table 1, fairness; see `list`).")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    sub.add_parser("list", help="show the suite catalogue") \
+       .set_defaults(fn=cmd_list)
+
+    run = sub.add_parser("run", help="run a suite and write its JSON result")
+    run.add_argument("--suite", required=True)
+    run.add_argument("--out", required=True,
+                     help="output JSON path (e.g. BENCH_paper.json)")
+    run.add_argument("--report", default=None,
+                     help="also render markdown to this path "
+                          f"(default for --suite paper: {DEFAULT_REPORT})")
+    run.add_argument("--no-report", action="store_true",
+                     help="skip the default markdown render")
+    run.add_argument("--quick", action="store_true",
+                     help="tiny grid for smoke runs")
+    run.add_argument("--threads", default="",
+                     help="comma-separated thread counts, e.g. 1,2,4,8")
+    run.add_argument("--steps", type=int, default=None,
+                     help="micro-steps per cell")
+    run.add_argument("--replicas", type=int, default=None,
+                     help="vmapped replica ensemble size per cell")
+    run.add_argument("--algs", default="",
+                     help="comma-separated lock subset (default: suite's)")
+    run.add_argument("--seed", type=int, default=0)
+    run.add_argument("--no-progress", action="store_true")
+    run.set_defaults(fn=cmd_run)
+
+    rep = sub.add_parser("report",
+                         help="re-render markdown from an existing result")
+    rep.add_argument("--in", dest="infile", required=True)
+    rep.add_argument("--out", default=None)
+    rep.set_defaults(fn=cmd_report)
+
+    val = sub.add_parser("validate", help="schema-check a result document")
+    val.add_argument("--in", dest="infile", required=True)
+    val.set_defaults(fn=cmd_validate)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except registry.UnknownSuiteError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+    except FileNotFoundError as e:
+        print(f"error: no such file: {e.filename}", file=sys.stderr)
+    except ValueError as e:           # invalid result document
+        print(f"error: {e}", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,229 @@
+"""Sweep driver: vmapped replica-ensemble grids over the lock simulator.
+
+The unit of work is a *cell* — one (lock program, thread count) pair.
+Thread count fixes every array shape in the machine, so a cell jit-compiles
+exactly once; within a cell the whole replica x NUMA-configuration grid is
+``jax.vmap``-ed over the single ``jax.lax.scan`` engine and runs in one XLA
+program (``run_grid``). The NUMA node count rides through the grid as a
+*traced* value — ``CostModel`` arithmetic is pure data-flow — which is what
+lets Table 1's 1-node and 2-node variants share a compile.
+
+Also here: the admission-queue bypass instrumentation (paper §2 bounded
+bypass, §9.4 mitigation) driven against ``repro.core.admission`` policies,
+and the reference-interleaver fairness probes (Table 2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.registry import BenchConfig, emit
+from repro.core.admission import POLICIES, max_bypass_bound
+from repro.core.locks.programs import PROGRAMS
+from repro.core.sim.api import summarize_ensemble
+from repro.core.sim.machine import CostModel, MachineState, run_machine
+
+ALL_ALGS = tuple(sorted(PROGRAMS))
+
+# Point metrics exported into sweep series (BenchResult field -> key).
+POINT_METRICS = ("throughput", "miss_per_episode", "inval_per_episode",
+                 "remote_per_episode", "latency", "unfairness")
+
+
+def run_grid(prog, n_threads: int, n_steps: int, seeds, n_nodes,
+             cost: CostModel = CostModel()) -> MachineState:
+    """Run the (seed, n_nodes) grid for one cell in a single jit: vmap of
+    the scan engine over the ensemble, NUMA config as traced data."""
+    seeds = jnp.asarray(seeds, jnp.int32)
+    nodes = jnp.asarray(n_nodes, jnp.int32)
+
+    @jax.jit
+    def go(seeds, nodes):
+        def one(seed, nn):
+            cm = CostModel(hit=cost.hit, local_miss=cost.local_miss,
+                           remote_miss=cost.remote_miss, n_nodes=nn)
+            return run_machine(prog, n_threads, n_steps, cm, seed)
+        return jax.vmap(one)(seeds, nodes)
+
+    return go(seeds, nodes)
+
+
+def _tree_slice(s, sel):
+    return jax.tree_util.tree_map(lambda a: a[sel], s)
+
+
+def bench_cell(alg: str, n_threads: int, cfg: BenchConfig, *,
+               ncs_max: int = 0, cs_shared=True, n_nodes=None):
+    """One cell with the replica ensemble vmapped; returns BenchResult."""
+    prog = PROGRAMS[alg](n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
+    if n_nodes is None:
+        n_nodes = 2 if n_threads > cfg.numa_above else 1
+    seeds = np.arange(cfg.seed0, cfg.seed0 + cfg.n_replicas)
+    s = run_grid(prog, n_threads, cfg.n_steps, seeds,
+                 np.full_like(seeds, n_nodes))
+    return summarize_ensemble(alg, n_threads, s)
+
+
+def lock_sweep(algs, cfg: BenchConfig, *, ncs_max: int = 0, cs_shared=True,
+               tag: str = "sweep") -> list:
+    """Thread sweep for each algorithm -> schema series list."""
+    series = []
+    for alg in algs:
+        points = []
+        for t in cfg.threads:
+            t0 = time.time()
+            r = bench_cell(alg, t, cfg, ncs_max=ncs_max, cs_shared=cs_shared)
+            wall = time.time() - t0
+            p = {"threads": t, "episodes": r.episodes,
+                 "wall_s": round(wall, 3)}
+            for m in POINT_METRICS:
+                p[m] = round(float(getattr(r, m)), 4)
+            points.append(p)
+            if cfg.verbose:
+                emit(f"{tag}/{alg}/T{t}",
+                     wall / max(r.episodes, 1) * 1e6,
+                     f"thr={r.throughput:.3f}/kcyc "
+                     f"miss/ep={r.miss_per_episode:.2f}")
+        series.append({"label": alg, "points": points})
+    return series
+
+
+def coherence_rows(algs, cfg: BenchConfig, n_threads: int = 10,
+                   paper: dict | None = None) -> list:
+    """Table 1: coherence traffic per episode, degenerate local CS. The
+    1-node and 2-node NUMA variants run in one jit per algorithm."""
+    paper = paper or {}
+    n_threads = min(n_threads, max(max(cfg.threads), 2))
+    rows = []
+    for alg in algs:
+        t0 = time.time()
+        prog = PROGRAMS[alg](n_threads, ncs_max=0, cs_shared=False)
+        seeds = np.arange(cfg.seed0, cfg.seed0 + cfg.n_replicas)
+        grid_seeds = np.concatenate([seeds, seeds])
+        grid_nodes = np.concatenate([np.full_like(seeds, 1),
+                                     np.full_like(seeds, 2)])
+        s = run_grid(prog, n_threads, cfg.n_steps, grid_seeds, grid_nodes)
+        r1 = summarize_ensemble(alg, n_threads,
+                                _tree_slice(s, slice(0, len(seeds))))
+        r2 = summarize_ensemble(alg, n_threads,
+                                _tree_slice(s, slice(len(seeds), None)))
+        rows.append({
+            "lock": alg,
+            "miss_per_episode": round(r1.miss_per_episode, 2),
+            "inval_per_episode": round(r1.inval_per_episode, 2),
+            "remote_per_episode_numa": round(r2.remote_per_episode, 2),
+            "paper_invalidations": paper.get(alg),
+        })
+        if cfg.verbose:
+            emit(f"coherence/{alg}", (time.time() - t0) * 1e6
+                 / max(r1.episodes, 1),
+                 f"miss/ep={r1.miss_per_episode:.2f} "
+                 f"paper={paper.get(alg)}")
+    return rows
+
+
+# --- admission-policy instrumentation (core.admission) ----------------------
+
+def bypass_trace(policy: str, n_threads: int = 8, n_events: int = 2000,
+                 seed: int = 0) -> dict:
+    """Closed-loop drive of an ``AdmissionQueue``: every thread re-arrives
+    immediately after service (sustained contention). For each completed
+    wait, record how many admissions of later arrivals overtook it —
+    total, and by any *single* other thread (the paper's §2 bound is 1 for
+    reciprocating, 0 for FIFO, unbounded for LIFO)."""
+    q = POLICIES[policy](seed)
+    arrival: dict = {}
+    suffered: dict = {}
+    by_thread: dict = {}
+    seq = 0
+    for t in range(n_threads):
+        q.push(t)
+        arrival[t], suffered[t], by_thread[t] = seq, 0, {}
+        seq += 1
+    per_wait, per_wait_single = [], []
+    for _ in range(n_events):
+        s = q.pop()
+        if s is None:
+            break
+        for t, a in arrival.items():
+            if t != s and a < arrival[s]:
+                suffered[t] += 1
+                by_thread[t][s] = by_thread[t].get(s, 0) + 1
+        per_wait.append(suffered[s])
+        per_wait_single.append(max(by_thread[s].values(), default=0))
+        del arrival[s]
+        arrival[s], suffered[s], by_thread[s] = seq, 0, {}
+        q.push(s)
+        seq += 1
+    return {
+        "per_wait": per_wait,
+        "per_wait_single": per_wait_single,
+        # threads still waiting at the end (LIFO starvation shows here)
+        "max_outstanding": max(suffered.values(), default=0),
+    }
+
+
+def bypass_histograms(policies, n_threads: int = 8, n_events: int = 2000,
+                      seed: int = 0, max_bin: int = 8):
+    """Histogram the per-wait bypass counts for each admission policy.
+
+    Returns ``(bins, series, stat_rows)`` where bins are
+    ``[0, 1, ..., max_bin-1, f"{max_bin}+"]``.
+    """
+    bins = [str(i) for i in range(max_bin)] + [f"{max_bin}+"]
+    series, stat_rows = [], []
+    for pol in policies:
+        tr = bypass_trace(pol, n_threads=n_threads, n_events=n_events,
+                          seed=seed)
+        counts = [0] * (max_bin + 1)
+        for v in tr["per_wait"]:
+            counts[min(v, max_bin)] += 1
+        series.append({"label": pol, "counts": counts})
+        bound = max_bypass_bound(pol, n_threads)
+        stat_rows.append({
+            "policy": pol,
+            "completed_waits": len(tr["per_wait"]),
+            "mean_bypass": round(float(np.mean(tr["per_wait"] or [0])), 3),
+            "max_bypass_per_wait": int(max(tr["per_wait"], default=0)),
+            "max_bypass_by_single_thread":
+                int(max(tr["per_wait_single"], default=0)),
+            "max_outstanding_unserved": int(tr["max_outstanding"]),
+            "theoretical_single_thread_bound":
+                ("inf" if bound == float("inf") else int(bound)),
+        })
+    return bins, series, stat_rows
+
+
+# --- reference-interleaver fairness probes (Table 2, §9) --------------------
+
+def reference_fairness(n_threads: int = 5, n_ops: int = 8000) -> dict:
+    from repro.core.locks.reference import ALGORITHMS
+    from repro.core.sim.interleave import run as ref_run
+    r = ref_run(ALGORITHMS["reciprocating"](n_threads), n_threads,
+                n_ops=n_ops, policy="rr")
+    cyc = r.cycle()
+    letters = "ABCDEFGH"[:n_threads]
+    return {
+        "cycle": list(cyc) if cyc else None,
+        "cycle_str": "".join(letters[t] for t in cyc) if cyc else None,
+        "cycle_admissions_sorted":
+            sorted(cyc.count(t) for t in range(n_threads)) if cyc else None,
+        "unfairness": round(r.unfairness(), 3),
+    }
+
+
+def mitigated_unfairness(n_threads: int = 5, n_events: int = 4000,
+                         seed: int = 0) -> float:
+    """§9.4 randomized intra-segment order: long-run max/min admissions."""
+    from repro.core.admission import ReciprocatingQueue
+    q = ReciprocatingQueue(seed, mitigate=True)
+    counts = np.zeros(n_threads, int)
+    for i in range(n_events):
+        q.push(i % n_threads)
+        got = q.pop()
+        if got is not None:
+            counts[got] += 1
+    return float(counts.max() / max(counts.min(), 1))

@@ -36,18 +36,10 @@ class BenchResult:
     admissions: np.ndarray     # (replicas, ADM_LOG) ring of admitted tids
 
 
-def bench_lock(name: str, n_threads: int, *, n_steps: int = 20_000,
-               ncs_max: int = 0, cs_shared: bool = True,
-               cost: CostModel = CostModel(n_nodes=2),
-               n_replicas: int = 4, seed0: int = 0) -> BenchResult:
-    prog = PROGRAMS[name](n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
-
-    @jax.jit
-    def go(seeds):
-        return jax.vmap(lambda s: run_machine(prog, n_threads, n_steps,
-                                              cost, s))(seeds)
-
-    s = go(jnp.arange(seed0, seed0 + n_replicas))
+def summarize_ensemble(name: str, n_threads: int, s) -> BenchResult:
+    """Aggregate a replica-stacked ``MachineState`` (leading ensemble axis)
+    into the paper's metrics. Shared by ``bench_lock`` and the
+    ``repro.bench`` sweep driver."""
     eps = np.asarray(s.episodes).sum(axis=1)           # per replica
     time = np.maximum(np.asarray(s.time), 1)
     thr = float((eps / time).mean() * 1e3)             # per kcycle
@@ -64,6 +56,21 @@ def bench_lock(name: str, n_threads: int, *, n_steps: int = 20_000,
         unfairness=float((per_thread.max(axis=1) / lo).mean()),
         admissions=np.asarray(s.adm_log),
     )
+
+
+def bench_lock(name: str, n_threads: int, *, n_steps: int = 20_000,
+               ncs_max: int = 0, cs_shared: bool = True,
+               cost: CostModel = CostModel(n_nodes=2),
+               n_replicas: int = 4, seed0: int = 0) -> BenchResult:
+    prog = PROGRAMS[name](n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
+
+    @jax.jit
+    def go(seeds):
+        return jax.vmap(lambda s: run_machine(prog, n_threads, n_steps,
+                                              cost, s))(seeds)
+
+    s = go(jnp.arange(seed0, seed0 + n_replicas))
+    return summarize_ensemble(name, n_threads, s)
 
 
 def sweep_threads(name: str, thread_counts, **kw):

@@ -136,6 +136,8 @@ def _lower_compile(cfg, shape, ctx, kind):
 
 def _rates(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x: one entry per program
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
             "coll": collective_stats(compiled.as_text())}

@@ -7,16 +7,14 @@ import; smoke tests and benchmarks see the real single device.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.sharding.compat import make_mesh
 from repro.sharding.ctx import MeshCtx
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_ctx(mesh) -> MeshCtx:
@@ -25,5 +23,4 @@ def make_ctx(mesh) -> MeshCtx:
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1):
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,59 @@
+"""Version-compatibility shims for moving jax APIs.
+
+``shard_map`` has lived in three places across jax releases:
+
+* ``jax.experimental.shard_map.shard_map``  (0.4.x, the pinned toolchain)
+* ``jax.sharding.shard_map`` / ``jax.shard_map``  (newer releases, after
+  graduation from experimental)
+
+Import it from here (``from repro.sharding.compat import shard_map``) so
+model/train code is insulated from the move.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # newest: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:
+    try:                                # experimental home (jax 0.4.x)
+        from jax.experimental.shard_map import shard_map as _shard_map
+    except ImportError:                 # interim home
+        from jax.sharding import shard_map as _shard_map  # type: ignore
+
+# The replication-check kwarg was renamed check_rep -> check_vma when
+# shard_map graduated. Callers use the new name; translate for old jax.
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(f, /, *args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, *args, **kwargs)
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg) only exist on
+    newer jax; 0.4.x meshes are implicitly Auto, so plain ``make_mesh`` is
+    equivalent there.
+    """
+    import jax
+    try:
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        pass
+    try:        # jax >= 0.4.35, no AxisType yet
+        return jax.make_mesh(shape, axis_names)
+    except AttributeError:   # older still: build the Mesh by hand
+        import math
+        import numpy as np
+        from jax.sharding import Mesh
+        n = math.prod(shape)
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axis_names)
+
+
+__all__ = ["shard_map", "make_mesh"]

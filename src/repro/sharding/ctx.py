@@ -53,6 +53,6 @@ def constrain(x, ctx: "MeshCtx | None", *dims):
 
 def trivial_ctx() -> MeshCtx:
     """1x1 mesh on the default device — used by CPU smoke tests."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     return MeshCtx(mesh=mesh, batch_axes=("data",), model_axis="model")

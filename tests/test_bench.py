@@ -1,0 +1,126 @@
+"""Tests for the repro.bench harness: schema round-trip, registry
+coverage of every lock program, bypass instrumentation bounds, CLI, and a
+tiny end-to-end `paper` sweep."""
+import json
+import os
+
+import pytest
+
+from repro.bench import (
+    BenchConfig, SCHEMA_VERSION, load_result, names, run_suite, save_result,
+    validate_result,
+)
+from repro.bench import schema, sweep
+from repro.bench.cli import main as cli_main
+from repro.bench.report import render_markdown
+from repro.bench.suites import FIG1_ALGS
+from repro.core.locks.programs import PROGRAMS
+
+
+def _sample_doc():
+    doc = schema.new_result("unit", config={"quick": True})
+    doc["experiments"] = [
+        schema.sweep_experiment(
+            "s", "a sweep", "threads",
+            [{"label": "mcs",
+              "points": [{"threads": 1, "throughput": 2.5},
+                         {"threads": 2, "throughput": 1.5}]}]),
+        schema.table_experiment("t", "a table", ["lock", "miss"],
+                                [{"lock": "clh", "miss": 5.0}]),
+        schema.scalars_experiment("v", "scalars", {"cycle": "ABBA",
+                                                   "unfair": 2.0}),
+        schema.hist_experiment("h", "hist", ["0", "1", "2+"],
+                               [{"label": "fifo", "counts": [10, 0, 0]}]),
+    ]
+    return doc
+
+
+def test_schema_roundtrip(tmp_path):
+    doc = _sample_doc()
+    assert validate_result(doc) == []
+    p = str(tmp_path / "r.json")
+    save_result(doc, p)
+    back = load_result(p)
+    assert back == json.loads(json.dumps(doc))   # float-safe equality
+    assert back["schema"] == SCHEMA_VERSION
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda d: d.pop("schema"),
+    lambda d: d.__setitem__("experiments", "nope"),
+    lambda d: d["experiments"][0].__setitem__("kind", "mystery"),
+    lambda d: d["experiments"][0]["series"][0]["points"].clear(),
+    lambda d: d["experiments"][3]["series"][0].__setitem__("counts", [1]),
+    lambda d: d["experiments"].append(dict(d["experiments"][1])),  # dup name
+])
+def test_schema_rejects_invalid(mutate, tmp_path):
+    doc = _sample_doc()
+    mutate(doc)
+    assert validate_result(doc) != []
+    with pytest.raises(ValueError):
+        save_result(doc, str(tmp_path / "bad.json"))
+
+
+def test_registry_exposes_every_lock_program():
+    # the paper suite's Fig. 1 sweeps must cover the full program roster
+    assert set(FIG1_ALGS) == set(PROGRAMS)
+    for suite in ("paper", "mutexbench", "coherence", "fairness",
+                  "atomics", "kvstore", "residency", "scheduler",
+                  "kernels", "roofline"):
+        assert suite in names()
+
+
+def test_bypass_bounds_match_paper():
+    bins, series, stats = sweep.bypass_histograms(
+        ("fifo", "lifo", "reciprocating"), n_threads=6, n_events=600)
+    by = {r["policy"]: r for r in stats}
+    assert by["fifo"]["max_bypass_per_wait"] == 0
+    # paper §2: any single later arrival overtakes a waiter at most once
+    assert by["reciprocating"]["max_bypass_by_single_thread"] <= 1
+    assert by["reciprocating"]["theoretical_single_thread_bound"] == 1
+    # raw LIFO starves: a waiter is still outstanding after many bypasses
+    assert by["lifo"]["max_outstanding_unserved"] > 100
+    labels = [s["label"] for s in series]
+    assert labels == ["fifo", "lifo", "reciprocating"]
+    assert all(len(s["counts"]) == len(bins) for s in series)
+
+
+TINY = BenchConfig(threads=(2,), n_steps=250, n_replicas=1, verbose=False,
+                   quick=True)
+
+
+def test_paper_suite_tiny_sweep():
+    doc = run_suite("paper", TINY)
+    assert validate_result(doc) == []
+    by_name = {e["name"]: e for e in doc["experiments"]}
+    # per-lock throughput-vs-threads curves for every program
+    fig1a = by_name["fig1a_max_contention"]
+    assert {s["label"] for s in fig1a["series"]} == set(PROGRAMS)
+    for s in fig1a["series"]:
+        for p in s["points"]:
+            assert p["threads"] == 2
+            assert p["throughput"] >= 0
+    assert {e["kind"] for e in doc["experiments"]} \
+        == {"sweep", "table", "scalars", "hist"}
+    # coherence table has one row per Table-1 lock
+    assert len(by_name["table1_coherence"]["rows"]) == 8
+    # the renderer accepts the real document
+    md = render_markdown(doc)
+    assert "GENERATED" in md and "fig" not in md.split("\n")[0]
+    assert "| lock |" in md
+
+
+def test_cli_run_report_validate(tmp_path, capsys):
+    out = str(tmp_path / "BENCH_residency.json")
+    rep = str(tmp_path / "RESULTS.md")
+    assert cli_main(["run", "--suite", "residency", "--out", out,
+                     "--quick", "--no-progress", "--report", rep]) == 0
+    assert os.path.exists(out) and os.path.exists(rep)
+    doc = load_result(out)
+    assert doc["suite"] == "residency"
+    assert cli_main(["validate", "--in", out]) == 0
+    # re-render from disk
+    rep2 = str(tmp_path / "R2.md")
+    assert cli_main(["report", "--in", out, "--out", rep2]) == 0
+    with open(rep2) as f:
+        assert "Appendix C" in f.read()

@@ -9,7 +9,12 @@
 * Progress (no deadlock / livelock of the whole system)
 """
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # property tests degrade to fixed parametrization
+    HAVE_HYPOTHESIS = False
 
 from repro.core.locks.reference import ALGORITHMS
 from repro.core.sim.interleave import run
@@ -19,10 +24,21 @@ BB_ALGS = ["reciprocating", "reciprocating_gated", "retrograde"]
 ALL = sorted(ALGORITHMS)
 
 
+if HAVE_HYPOTHESIS:
+    _mx_cases = lambda f: settings(max_examples=20, deadline=None)(
+        given(seed=st.integers(0, 10_000), n=st.integers(2, 8),
+              ncs=st.integers(0, 3))(f))
+    _run_cases = lambda f: settings(max_examples=15, deadline=None)(
+        given(seed=st.integers(0, 10_000), n=st.integers(2, 8))(f))
+else:
+    _mx_cases = pytest.mark.parametrize(
+        "seed,n,ncs", [(0, 2, 0), (1, 5, 1), (7, 8, 3), (42, 3, 2)])
+    _run_cases = pytest.mark.parametrize(
+        "seed,n", [(0, 2), (1, 5), (7, 8), (42, 3)])
+
+
 @pytest.mark.parametrize("name", ALL)
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), n=st.integers(2, 8),
-       ncs=st.integers(0, 3))
+@_mx_cases
 def test_mutual_exclusion_and_progress(name, seed, n, ncs):
     r = run(ALGORITHMS[name](n), n, n_ops=6000, policy="random",
             seed=seed, ncs_ops=ncs)
@@ -32,8 +48,7 @@ def test_mutual_exclusion_and_progress(name, seed, n, ncs):
 
 
 @pytest.mark.parametrize("name", FIFO_ALGS)
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000), n=st.integers(2, 8))
+@_run_cases
 def test_strict_fifo(name, seed, n):
     r = run(ALGORITHMS[name](n), n, n_ops=8000, policy="random", seed=seed)
     assert r.is_fifo(), f"{name} violated FIFO"
@@ -41,8 +56,7 @@ def test_strict_fifo(name, seed, n):
 
 
 @pytest.mark.parametrize("name", BB_ALGS)
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000), n=st.integers(2, 8))
+@_run_cases
 def test_bounded_bypass(name, seed, n):
     """Paper §2: a later arrival can overtake a waiter at most once before
     the waiter is next admitted."""

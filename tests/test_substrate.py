@@ -9,7 +9,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # property tests degrade to fixed parametrization
+    HAVE_HYPOTHESIS = False
 
 from repro.core.admission import POLICIES, ReciprocatingQueue
 from repro.core.runtime.reciprocating import ReciprocatingLock
@@ -174,9 +179,16 @@ def test_compressed_allreduce_error_feedback():
 # ---------------------------------------------------------------------------
 # elastic MoE relayout
 # ---------------------------------------------------------------------------
-@settings(max_examples=10, deadline=None)
-@given(m1=st.sampled_from([1, 2, 4, 8, 16]),
-       m2=st.sampled_from([1, 2, 4, 8, 16]))
+if HAVE_HYPOTHESIS:
+    _relayout_cases = lambda f: settings(max_examples=10, deadline=None)(
+        given(m1=st.sampled_from([1, 2, 4, 8, 16]),
+              m2=st.sampled_from([1, 2, 4, 8, 16]))(f))
+else:
+    _relayout_cases = pytest.mark.parametrize(
+        "m1,m2", [(1, 2), (2, 4), (4, 8), (8, 16), (16, 1), (4, 4)])
+
+
+@_relayout_cases
 def test_moe_relayout_roundtrip(m1, m2):
     from repro.models.layers import moe_topology
     from repro.train.elastic import relayout_moe
