@@ -23,6 +23,7 @@ SECTIONS = {
     "residency": ("residency", "appc_residency"),
     "kernels": ("kernels", "kernel_serpentine"),
     "scheduler": ("scheduler", "scheduler_policies"),
+    "serve": ("serve", "serve_policies"),
     "kvstore": ("kvstore", "fig3_kvstore"),
     "atomics": ("atomics", "fig2_atomics"),
     "mutexbench": ("mutexbench", "mutexbench"),

@@ -1,0 +1,19 @@
+"""Serving-engine benchmark: policy × offered-load sweep on the unified
+continuous-batching core + paged-KV pool, and the model-backed engine
+smoke (docs/SERVING.md §6).
+
+Shim over the registered ``serve`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite serve``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_suite_main
+from repro.bench.suites import scheduler_drive as drive  # noqa: F401
+
+
+def main() -> dict:
+    return run_suite_main("serve", artifact="serve_policies")
+
+
+if __name__ == "__main__":
+    main()

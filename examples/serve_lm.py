@@ -1,6 +1,15 @@
-"""Serving example: batched generation through the inference engine with
-reciprocating admission (segments = detached batches), on a reduced
-starcoder2-3b.
+"""Serving example: continuous batching through the unified scheduler
+core (docs/SERVING.md) on a reduced starcoder2-3b.
+
+Demonstrates the pieces the serving guide walks through:
+
+* per-step admission — requests arrive staggered (``arrival`` is in
+  scheduler steps) and are admitted into slots as they free up;
+* per-request early exit — ``max_new`` varies, so finished requests
+  leave their slot instead of riding the batch to the longest request;
+* paged KV with prefix sharing — two prompt families share a 16-token
+  prefix (``prefix_id``/``prefix_len``), so later family members pin the
+  cached prefix blocks copy-free.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -17,21 +26,41 @@ from repro.serve.engine import GenRequest, InferenceEngine
 def main() -> None:
     cfg = smoke_config(get_config("starcoder2-3b"))
     params = M_.init_params(cfg, jax.random.PRNGKey(0))
-    eng = InferenceEngine(cfg, params, policy="reciprocating", max_batch=4)
+    eng = InferenceEngine(cfg, params, policy="reciprocating", max_batch=4,
+                          max_seq=128, block_size=16)
+    print(f"[serve_lm] paged={eng.paged} "
+          f"pool={eng.pool.cap if eng.pool else 0} blocks")
 
     rng = np.random.default_rng(7)
+    families = {f: rng.integers(1, 97, 16, dtype=np.int32)
+                for f in range(2)}
     t0 = time.time()
     for i in range(10):
-        prompt = rng.integers(1, 97, int(rng.integers(4, 24)),
-                              dtype=np.int32)
-        eng.submit(GenRequest(rid=i, tokens=prompt, max_new=8))
+        fam = i % 2
+        prompt = np.concatenate(
+            [families[fam],
+             rng.integers(1, 97, int(rng.integers(2, 8)), dtype=np.int32)])
+        eng.submit(GenRequest(
+            rid=i, tokens=prompt, prefix_id=fam, prefix_len=16,
+            max_new=int(rng.integers(3, 13)),
+            arrival=float(i)))                  # staggered arrivals
     done = eng.run()
     dt = time.time() - t0
+
     toks = sum(len(r.out) for r in done)
     for r in done[:3]:
-        print(f"req {r.rid}: {len(r.tokens)} prompt toks -> {r.out}")
+        print(f"req {r.rid}: {len(r.tokens)} prompt toks, "
+              f"admitted@{r.admitted:.0f} finished@{r.finished:.0f} "
+              f"hit={r.prefill_hit:.2f} -> {r.out}")
+    c = eng.counters
+    from repro.bench.suites import static_batch_slot_steps
+    naive = static_batch_slot_steps(done, max_batch=4)
     print(f"[serve_lm] {len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"(CPU smoke config)")
+    print(f"[serve_lm] {int(eng.core.time)} scheduler steps, "
+          f"{c.slot_steps} slot-steps (detached-segment batching would "
+          f"burn {naive}); pool "
+          f"{eng.pool.stats.to_dict() if eng.pool else {}}")
 
 
 if __name__ == "__main__":

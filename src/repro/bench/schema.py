@@ -26,6 +26,16 @@ evaluation reports:
                 distributions): ``{"bins": [...], "series":
                 [{"label": "lifo", "counts": [...]}]}``
 
+The ``x`` axis of a sweep is whatever the suite varies — ``threads`` for
+the paper figures, ``offered_load`` (requests/step) for the ``serve``
+suite. The serve suite (docs/SERVING.md §6) adds three experiments, all
+expressed in the existing kinds: ``serve_policy_load`` (sweep —
+throughput / tail wait / prefix-hit curves per admission policy),
+``serve_pool`` (table — starvation + paged-KV pool counters at the
+heaviest load), and ``serve_engine_smoke`` (scalars — the model-backed
+paged engine run end-to-end; full runs only, values may nest one dict of
+pool counters).
+
 ``validate_result`` is the single source of truth for well-formedness;
 ``save_result``/``load_result`` refuse to write or return an invalid
 document, so a BENCH_*.json on disk is schema-valid by construction.

@@ -12,9 +12,12 @@ builders end-to-end and is what regenerates ``docs/RESULTS.md``:
                            bounded-bypass histograms (core.admission)
   residency    App. C      Jensen/decay residual-residency model
   scheduler    beyond-paper reciprocating continuous-batching admission
+  serve        beyond-paper serving engine: policy × load sweep on the
+               unified core + paged-KV pool, model-backed engine smoke
+               (docs/SERVING.md)
   kernels      beyond-paper serpentine DMA savings accounting
   roofline     EXPERIMENTS  dry-run artifact aggregation
-  paper        Figs 1-3 + Table 1 + fairness/bypass, one document
+  paper        Figs 1-3 + Table 1 + fairness/bypass + serve, one document
 """
 from __future__ import annotations
 
@@ -198,7 +201,10 @@ def scheduler_drive(policy: str, *, n_req: int = 600, mean_gap: float = 14.0,
     """Bursty shared-prefix workload against the continuous batcher: a
     family arrives as a burst of 2-6 requests close together (users
     iterating on one prompt) — the regime where admission order interacts
-    with prefix residency."""
+    with prefix residency (SERVING.md §4). ``mean_gap`` sets the offered
+    load (mean burst size is 4 requests, so load ≈ 4/mean_gap req/step).
+    Runs on the same ``ServeCore`` + ``PagedKVPool`` the model engine
+    uses; the summary includes the pool's eviction count."""
     from repro.serve.scheduler import ContinuousBatcher, Request
     sched = ContinuousBatcher(policy=policy, max_batch=4, pool_blocks=pool,
                               seed=seed)
@@ -216,7 +222,9 @@ def scheduler_drive(policy: str, *, n_req: int = 600, mean_gap: float = 14.0,
                 decode_tokens=int(rng.integers(4, 16))))
             i += 1
     sched.drain()
-    return sched.stats.summary()
+    s = sched.stats.summary()
+    s["pool_evictions"] = sched.pool.stats.evictions
+    return s
 
 
 def build_scheduler(cfg: BenchConfig) -> list:
@@ -245,6 +253,129 @@ def build_scheduler(cfg: BenchConfig) -> list:
         "scheduler_policies",
         "Serving scheduler — admission policy comparison on a bursty "
         "shared-prefix workload", cols, rows)]
+
+
+SERVE_GAPS_FULL = (28.0, 14.0, 7.0, 4.0)    # mean inter-burst gap (steps)
+SERVE_GAPS_QUICK = (14.0, 7.0)
+SERVE_METRICS = ("throughput_rps", "p99_wait", "max_wait", "p99_latency",
+                 "mean_wait", "prefix_hit_rate", "pool_evictions")
+
+
+def static_batch_slot_steps(done: list, max_batch: int) -> int:
+    """Decode slot-steps the old detached-segment engine would burn:
+    submission-order segments of ``max_batch``, every slot riding to the
+    segment's longest request."""
+    reqs = sorted(done, key=lambda r: r.rid)
+    return sum(len(seg) * max(len(r.out) for r in seg)
+               for seg in (reqs[i:i + max_batch]
+                           for i in range(0, len(reqs), max_batch)))
+
+
+def serve_engine_smoke(seed: int = 0) -> dict:
+    """Model-backed serving smoke (SERVING.md §6): the paged continuous
+    batcher on a reduced starcoder2-3b, two shared-prefix families, mixed
+    ``max_new`` so early exit and per-step admission are both exercised."""
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import model as M_
+    from repro.serve.engine import GenRequest, InferenceEngine
+
+    mcfg = smoke_config(get_config("starcoder2-3b")).replace(
+        n_layers=2, vocab_size=256)
+    params = M_.init_params(mcfg, jax.random.PRNGKey(seed))
+    eng = InferenceEngine(mcfg, params, policy="reciprocating",
+                          max_batch=4, max_seq=64, block_size=8)
+    rng = np.random.default_rng(seed)
+    shared = {f: rng.integers(1, 97, 16, dtype=np.int32) for f in range(2)}
+    t0 = time.time()
+    for i in range(8):
+        fam = i % 2
+        toks = np.concatenate(
+            [shared[fam], rng.integers(1, 97, 4, dtype=np.int32)])
+        eng.submit(GenRequest(rid=i, tokens=toks, prefix_id=fam,
+                              prefix_len=16,
+                              max_new=int(rng.integers(2, 9))))
+    done = eng.run()
+    wall = time.time() - t0
+    gen = sum(len(r.out) for r in done)
+    c = eng.counters
+    naive = static_batch_slot_steps(done, max_batch=4)
+    return {
+        "requests": len(done),
+        "generated_tokens": gen,
+        "scheduler_steps": int(eng.core.time),
+        "decode_batches": c.decode_batches,
+        "slot_steps": c.slot_steps,
+        "slot_steps_static_batch": naive,
+        "early_exit_savings":
+            round(1.0 - c.slot_steps / max(naive, 1), 4),
+        "mean_prefill_hit":
+            round(float(np.mean([r.prefill_hit for r in done])), 4),
+        "pool": eng.pool.stats.to_dict(),
+        "wall_s": round(wall, 2),
+        "tokens_per_s": round(gen / max(wall, 1e-9), 2),
+    }
+
+
+def build_serve(cfg: BenchConfig) -> list:
+    """Serving suite (SERVING.md §6): policy × offered-load sweep on the
+    unified scheduler core, pool/starvation table at the heaviest load,
+    and (full runs only) the model-backed paged-engine smoke."""
+    gaps = SERVE_GAPS_QUICK if cfg.quick else SERVE_GAPS_FULL
+    n_req = 120 if cfg.quick else 600
+    n_seeds = 1 if cfg.quick else 3
+    series, heavy_rows = [], []
+    for policy in ADMISSION_POLICIES:
+        t0 = time.time()
+        pts = []
+        for gap in gaps:
+            agg: dict = {}
+            for seed in range(n_seeds):
+                d = scheduler_drive(policy, n_req=n_req, mean_gap=gap,
+                                    seed=cfg.seed0 + seed)
+                for k in SERVE_METRICS:
+                    agg.setdefault(k, []).append(d[k])
+            pt = {"offered_load": round(4.0 / gap, 3)}
+            pt.update({k: round(float(np.mean(v)), 4)
+                       for k, v in agg.items()})
+            pts.append(pt)
+        series.append({"label": policy, "points": pts})
+        heavy = dict(pts[-1])
+        heavy_rows.append({"policy": policy, **heavy})
+        if cfg.verbose:
+            emit(f"serve/{policy}",
+                 (time.time() - t0) * 1e6 / (len(gaps) * n_seeds * n_req),
+                 f"hit={pts[-1]['prefix_hit_rate']:.3f} "
+                 f"p99wait={pts[-1]['p99_wait']:.1f} "
+                 f"maxwait={pts[-1]['max_wait']:.1f}")
+    exps = [
+        sweep_experiment(
+            "serve_policy_load",
+            "Serving — throughput / tail wait / prefix hit vs offered "
+            "load × admission policy (unified scheduler core, paged-KV "
+            "pool)", "offered_load", series,
+            meta={"series_label": "policy"}),
+        table_experiment(
+            "serve_pool",
+            "Serving — starvation and paged-KV pool behaviour at the "
+            "heaviest offered load",
+            ["policy", "offered_load"] + list(SERVE_METRICS), heavy_rows),
+    ]
+    if not cfg.quick:
+        t0 = time.time()
+        vals = serve_engine_smoke(cfg.seed0)
+        if cfg.verbose:
+            emit("serve/engine_smoke", (time.time() - t0) * 1e6
+                 / max(vals["generated_tokens"], 1),
+                 f"steps={vals['scheduler_steps']} "
+                 f"early_exit={vals['early_exit_savings']:.2%} "
+                 f"hit={vals['mean_prefill_hit']:.2f}")
+        exps.append(scalars_experiment(
+            "serve_engine_smoke",
+            "Serving — model-backed paged continuous-batching engine "
+            "smoke (reduced starcoder2-3b, CPU)", vals))
+    return exps
 
 
 def build_kernels(cfg: BenchConfig) -> list:
@@ -345,6 +476,10 @@ register("residency", "Cache residency (App. C)",
 register("scheduler", "Serving-scheduler admission (beyond paper)",
          "Reciprocating admission vs FIFO/LIFO in the continuous "
          "batcher.")(build_scheduler)
+register("serve", "Serving engine (beyond paper, docs/SERVING.md)",
+         "Policy × offered-load sweep on the unified continuous-batching "
+         "core with the paged-KV pool, plus the model-backed engine "
+         "smoke (full runs).")(build_serve)
 register("kernels", "Serpentine kernel accounting (beyond paper)",
          "Structural KV-fetch savings of the serpentine flash-attention "
          "schedule.")(build_kernels)
@@ -356,7 +491,8 @@ register("roofline", "Roofline aggregation",
 @register("paper", "Paper reproduction (Figs 1-3, Table 1, fairness)",
           "End-to-end reproduction of the paper's evaluation: "
           "throughput-vs-threads for every lock program, coherence "
-          "traffic, fairness and bounded-bypass histograms.",
+          "traffic, fairness and bounded-bypass histograms — plus the "
+          "beyond-paper serving section (docs/SERVING.md).",
           tags=("paper",))
 def build_paper(cfg: BenchConfig) -> list:
     exps = []
@@ -365,4 +501,5 @@ def build_paper(cfg: BenchConfig) -> list:
     exps += build_fig3(cfg)
     exps += build_table1(cfg)
     exps += build_fairness(cfg)
+    exps += build_serve(cfg)
     return exps

@@ -1,5 +1,10 @@
 """Serving launcher: ``PYTHONPATH=src python -m repro.launch.serve
---arch granite-3-2b --smoke --requests 8``."""
+--arch granite-3-2b --smoke --requests 8``.
+
+Runs the continuous-batching engine (docs/SERVING.md): paged KV on the
+supported families, dense slot fallback elsewhere; per-step admission
+under the chosen policy and per-request early exit either way.
+"""
 from __future__ import annotations
 
 import argparse
@@ -14,6 +19,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--policy", default="reciprocating")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
 
     from repro.configs import get_config, smoke_config
@@ -22,17 +29,23 @@ def main() -> None:
 
     cfg = smoke_config(get_config(args.arch))
     params = M_.init_params(cfg, jax.random.PRNGKey(0))
-    eng = InferenceEngine(cfg, params, policy=args.policy)
+    eng = InferenceEngine(cfg, params, policy=args.policy,
+                          max_batch=args.max_batch)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         toks = rng.integers(1, min(cfg.vocab_size, 97),
                             rng.integers(4, 17), dtype=np.int32)
-        eng.submit(GenRequest(rid=i, tokens=toks, max_new=8))
+        eng.submit(GenRequest(rid=i, tokens=toks,
+                              max_new=int(rng.integers(1, args.max_new + 1))))
     done = eng.run()
     for r in done:
-        print(f"req {r.rid}: prompt_len={len(r.tokens)} out={r.out}")
+        print(f"req {r.rid}: prompt_len={len(r.tokens)} "
+              f"admitted@{r.admitted:.0f} finished@{r.finished:.0f} "
+              f"out={r.out}")
+    c = eng.counters
     print(f"[serve] completed {len(done)} requests "
-          f"(policy={args.policy})")
+          f"(policy={args.policy}, paged={eng.paged}, "
+          f"{int(eng.core.time)} steps, {c.slot_steps} slot-steps)")
 
 
 if __name__ == "__main__":

@@ -354,12 +354,21 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: MeshCtx):
 # ---------------------------------------------------------------------------
 # prefill_step (the serve_step lowered for prefill_* shapes)
 # ---------------------------------------------------------------------------
-def prefill_step(params, batch, cfg: ModelConfig, ctx: MeshCtx):
-    """Full-sequence prefill: returns (last-token logits, populated cache)."""
+def prefill_step(params, batch, cfg: ModelConfig, ctx: MeshCtx,
+                 last_index=None):
+    """Full-sequence prefill: returns (last-token logits, populated cache).
+
+    ``last_index`` (int32 (B,), optional) selects which position's hidden
+    state feeds the logits — the last *real* token when the batch is
+    right-padded to a block boundary (paged serving, SERVING.md §3).
+    Right padding never perturbs earlier positions (causal attention), so
+    the default ``h[:, -1]`` remains exact for unpadded prompts."""
     fwd = forward_encdec if cfg.is_encoder_decoder else forward_lm
     h, _, kvs = fwd(params, batch, cfg, ctx, collect_kv=True)
     B, S, _ = h.shape
-    logits = jnp.einsum("bd,dv->bv", h[:, -1], unembed_matrix(params, cfg))
+    h_last = (h[:, -1] if last_index is None
+              else h[jnp.arange(B), last_index])
+    logits = jnp.einsum("bd,dv->bv", h_last, unembed_matrix(params, cfg))
     logits = cs(logits, ctx, "B", "M")
 
     cache = init_cache(cfg, B, S)
@@ -409,3 +418,71 @@ def prefill_step(params, batch, cfg: ModelConfig, ctx: MeshCtx):
     k, v = kvs["layers"]
     cache["k"], cache["v"] = ring(k), ring(v)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (serving, SERVING.md §3): gather-by-block-table
+# ---------------------------------------------------------------------------
+def paged_supported(cfg: ModelConfig, max_seq: int) -> bool:
+    """The paged path covers the plain-GQA text families (dense/moe) with
+    a non-ring cache; MLA/SSM/hybrid/encdec/vlm and sliding-window rings
+    use the dense slot fallback (support matrix in SERVING.md §3)."""
+    return (cfg.attention == "gqa" and cfg.family not in ("ssm", "hybrid")
+            and not cfg.is_encoder_decoder and not cfg.n_patches
+            and cache_len(cfg, max_seq) == max_seq)
+
+
+def cache_to_blocks(cache: dict, block: int):
+    """Chop a B=1 prefill cache into KV blocks: (L,1,S,KV,hd) k/v ->
+    (S//block, L, block, KV, hd), ready to scatter into the pools by
+    block id. S must be a block multiple (right-pad the prompt)."""
+    k, v = cache["k"], cache["v"]
+    L, _, S, KV, hd = k.shape
+    assert S % block == 0, (S, block)
+
+    def chop(t):
+        t = t[:, 0].reshape(L, S // block, block, KV, hd)
+        return t.transpose(1, 0, 2, 3, 4)
+    return chop(k), chop(v)
+
+
+def paged_decode_step(params, k_pool, v_pool, table, pos, tokens,
+                      cfg: ModelConfig, ctx: MeshCtx):
+    """One decode token per sequence against paged KV pools.
+
+    k_pool/v_pool: (P, L, block, KV, hd) — the pool, indexed by block id.
+    table:         (B, nb) int32 — per-slot block tables (id 0 = the null
+                   block for unused entries / empty slots).
+    pos:           (B,) int32 absolute position of the incoming token.
+    tokens:        (B,) int32.
+
+    Semantics are identical to ``decode_step`` on the dense cache the
+    table describes: the pools are gathered to (L, B, nb*block, KV, hd),
+    ``slot_pos`` is reconstructed from ``pos`` (slot i holds position i —
+    no ring, enforced by ``paged_supported``), and after the step only
+    the block containing the written slot is scattered back. Empty slots
+    point at the null block, which absorbs their garbage writes.
+    Returns (logits, k_pool, v_pool).
+    """
+    B, nb = table.shape
+    P, L, block, KV, hd = k_pool.shape
+    Sc = nb * block
+
+    def gather(pool):
+        t = pool[table]                          # (B, nb, L, block, KV, hd)
+        return t.transpose(2, 0, 1, 3, 4, 5).reshape(L, B, Sc, KV, hd)
+
+    iota = jnp.arange(Sc, dtype=jnp.int32)
+    slot_pos = jnp.where(iota[None, :] < pos[:, None], iota[None, :], -1)
+    cache = {"pos": pos, "slot_pos": slot_pos,
+             "k": gather(k_pool), "v": gather(v_pool)}
+    logits, cache = decode_step(params, cache, tokens, cfg, ctx)
+
+    bi = pos // block                            # block just written, per row
+
+    def cut(row, b):                             # row: (L, Sc, KV, hd)
+        return jax.lax.dynamic_slice_in_dim(row, b * block, block, axis=1)
+    ids = table[jnp.arange(B), bi]
+    k_pool = k_pool.at[ids].set(jax.vmap(cut, in_axes=(1, 0))(cache["k"], bi))
+    v_pool = v_pool.at[ids].set(jax.vmap(cut, in_axes=(1, 0))(cache["v"], bi))
+    return logits, k_pool, v_pool

@@ -1,0 +1,154 @@
+"""Slot-level continuous-batching core shared by every serving frontend.
+
+This module is the scheduling half of the serving architecture
+(SERVING.md §1): one admission core, two frontends. The model-backed
+engine (`serve/engine.py`) and the discrete-time simulator
+(`serve/scheduler.py`) both drive a ``ServeCore``; they differ only in
+the ``Executor`` plugged into it. Policy, fairness and residency numbers
+measured on the simulator are therefore claims about the same admission
+code the model engine runs.
+
+The core owns *scheduling state only*:
+
+* the arrival queue — an ``AdmissionQueue`` from ``core/admission.py``
+  (the paper's arrival-stack / entry-segment discipline, or a FIFO/LIFO
+  foil);
+* the slot roster — at most ``max_slots`` requests are *active*; a slot
+  freed by a finished request is refilled on the next step (per-step
+  admission, not detached static batches);
+* time — one ``step()`` is one decode iteration for every active slot;
+* completion stats.
+
+The executor owns *work state*: what "prefill" and "one decode step" cost
+(simulator) or compute (model engine + paged KV pool). The protocol is
+four hooks; ``work()`` returning a request signals completion, which is
+what makes per-request early exit structural rather than bolted on — the
+core retires the request and refills the slot the same step
+(SERVING.md §4).
+
+A request object must carry ``arrival`` / ``admitted`` / ``finished``
+floats (set to ``-1.0`` when unset); both ``serve.scheduler.Request`` and
+``serve.engine.GenRequest`` do.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.admission import POLICIES, AdmissionQueue
+
+
+class Executor:
+    """Work-model protocol plugged into ``ServeCore`` (SERVING.md §1)."""
+
+    def on_arrival(self, req, now: float) -> None:
+        """Request became visible to the scheduler (pre-admission)."""
+
+    def admit(self, req, now: float) -> None:
+        """Request won a slot: set up its work state (prefill plan, KV
+        blocks, prefix-hit accounting)."""
+        raise NotImplementedError
+
+    def work(self, active: list, now: float) -> list:
+        """Advance every active request by one step; return the subset
+        that finished this step."""
+        raise NotImplementedError
+
+    def retire(self, req) -> None:
+        """Request left its slot: release resources (KV blocks)."""
+
+
+@dataclass
+class ServeStats:
+    finished: list = field(default_factory=list)
+
+    def summary(self) -> dict:
+        if not self.finished:
+            return {}
+        waits = sorted(r.admitted - r.arrival for r in self.finished)
+        hits = [r.prefill_hit for r in self.finished]
+        lat = sorted(r.finished - r.arrival for r in self.finished)
+        n = len(waits)
+        return {
+            "n": n,
+            "mean_wait": sum(waits) / n,
+            "p50_wait": waits[n // 2],
+            "p99_wait": waits[min(n - 1, int(n * 0.99))],
+            "max_wait": waits[-1],
+            "p99_latency": lat[min(n - 1, int(n * 0.99))],
+            "prefix_hit_rate": sum(hits) / n,
+            "throughput_rps": n / max(max(r.finished for r in self.finished),
+                                      1e-9),
+        }
+
+
+class DrainStalled(RuntimeError):
+    """``drain()`` ran out of steps with work still queued — the workload
+    does not fit the step budget (or the executor never finishes it)."""
+
+
+class ServeCore:
+    """The continuous batcher: per-step admission into freed slots."""
+
+    def __init__(self, executor: Executor, policy: str = "reciprocating",
+                 max_slots: int = 8, seed: int = 0):
+        self.executor = executor
+        self.queue: AdmissionQueue = POLICIES[policy](seed)
+        self.policy = policy
+        self.max_slots = max_slots
+        self.pending: list = []         # submitted, not yet arrived
+        self.active: list = []          # admitted, occupying a slot
+        self.stats = ServeStats()
+        self.time = 0.0
+
+    def submit(self, req) -> None:
+        """Requests become visible at ``req.arrival`` (O(1) doorway:
+        arrival-stack push happens then, not now)."""
+        self.pending.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.active or len(self.queue) or self.pending)
+
+    def step(self) -> None:
+        """One scheduler tick == one decode iteration for every slot:
+        arrivals -> admissions into free slots -> one unit of work."""
+        self.time += 1.0
+        still = []
+        for r in self.pending:
+            if r.arrival <= self.time:
+                self.executor.on_arrival(r, self.time)
+                self.queue.push(r)
+            else:
+                still.append(r)
+        self.pending = still
+        while len(self.active) < self.max_slots:
+            r = self.queue.pop()
+            if r is None:
+                break
+            try:
+                r.admitted = self.time
+                self.executor.admit(r, self.time)
+            except BaseException:
+                # never lose the request: it re-queues on the next step
+                # (the error still surfaces to the caller)
+                r.admitted = -1.0
+                self.pending.append(r)
+                raise
+            self.active.append(r)
+        for r in self.executor.work(self.active, self.time):
+            r.finished = self.time
+            self.executor.retire(r)
+            self.active.remove(r)
+            self.stats.finished.append(r)
+
+    def drain(self, max_steps: int = 1_000_000) -> None:
+        """Run until idle. Raises ``DrainStalled`` (never silently
+        returns) if ``max_steps`` is exhausted with work still queued."""
+        steps = 0
+        while self.has_work():
+            if steps >= max_steps:
+                raise DrainStalled(
+                    f"drain({max_steps=}) exhausted with "
+                    f"{len(self.active)} active, {len(self.queue)} queued, "
+                    f"{len(self.pending)} pending requests")
+            self.step()
+            steps += 1

@@ -1,167 +1,124 @@
-"""Continuous-batching scheduler with reciprocating admission.
+"""Discrete-time serving simulator — a cost-model frontend over the
+shared continuous-batching core (SERVING.md §1).
 
-The engine admits waiting requests into free decode slots according to an
-``AdmissionQueue`` policy. The paper's reciprocating discipline gives:
+The scheduling logic (per-step admission into freed slots, policy queue,
+early exit) lives in ``serve/core.py`` and is the same code the
+model-backed engine runs; this module supplies only the *cost model*:
 
-* O(1) admission path (arrival stack push / segment pop — no heap),
-* bounded bypass => no request starvation (unlike raw LIFO),
-* LIFO-within-segment => a just-arrived request is served while its prompt
-  prefix is still resident in the KV/prefix block pool — the App. C decay
-  argument with the pool as the "LLC".
+* prefill cost (steps) = missed blocks × ``prefill_cost_per_block``,
+  where the miss fraction is probed against the paged KV pool
+  (``serve/kv_cache.py``, SERVING.md §2) — the App. C decay argument with
+  the pool as the "LLC";
+* each active request decodes 1 token/step and churns the pool.
 
-``PrefixCachePool`` models the pool: fixed capacity of blocks, LRU
-eviction; a request's prefill cost is discounted by the fraction of its
-prefix blocks still resident (shared-prefix workloads => residency decays
-as other requests churn the pool — exponential in load, exactly App. C).
+Multi-turn model: a follow-up request's prefix blocks are warm AT ARRIVAL
+(its previous turn just decoded them) and decay under pool churn while it
+waits — the paper's residency-decay structure. The reciprocating
+discipline admits just-arrived requests while their prefix is still
+resident, without raw LIFO's starvation pathology (SERVING.md §4).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-from repro.core.admission import POLICIES, AdmissionQueue
+from repro.serve.core import Executor, ServeCore, ServeStats
+from repro.serve.kv_cache import PagedKVPool, PrefixCachePool  # noqa: F401
+
+# Re-exported for callers that predate serve/core.py.
+SchedulerStats = ServeStats
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)              # identity semantics: the core compares
+class Request:                    # requests with list.remove()
     rid: int
     arrival: float
     prefix_id: int              # shared-prompt family (prefix cache key)
     prefix_blocks: int          # blocks covered by the shared prefix
     prompt_blocks: int          # unique prompt blocks
     decode_tokens: int
-    # runtime
+    # runtime (set by the core / executor)
     admitted: float = -1.0
     finished: float = -1.0
     prefill_hit: float = 0.0
+    # work state (SimExecutor): declared fields, not step()-injected attrs
+    _prefill_left: float = 0.0
+    _decode_left: int = 0
 
 
-class PrefixCachePool:
-    """LRU pool of KV blocks keyed by (prefix_id, block_idx)."""
+class SimExecutor(Executor):
+    """Cost-model executor: blocks and steps instead of arrays and
+    tokens (SERVING.md §5 fidelity contract)."""
 
-    def __init__(self, capacity_blocks: int):
-        self.cap = capacity_blocks
-        self._lru: OrderedDict = OrderedDict()
-
-    def hit_fraction(self, prefix_id: int, n_blocks: int) -> float:
-        if n_blocks == 0:
-            return 0.0
-        hits = 0
-        for b in range(n_blocks):
-            k = (prefix_id, b)
-            if k in self._lru:
-                hits += 1
-                self._lru.move_to_end(k)
-        return hits / n_blocks
-
-    def insert(self, prefix_id: int, n_blocks: int) -> None:
-        for b in range(n_blocks):
-            k = (prefix_id, b)
-            self._lru[k] = True
-            self._lru.move_to_end(k)
-        while len(self._lru) > self.cap:
-            self._lru.popitem(last=False)
-
-    def touch_decode(self, rid: int, blocks: int) -> None:
-        """Decode working set churns the pool (the residency decay)."""
-        self.insert(-rid - 1, blocks)
-
-
-@dataclass
-class SchedulerStats:
-    finished: list = field(default_factory=list)
-
-    def summary(self) -> dict:
-        if not self.finished:
-            return {}
-        waits = sorted(r.admitted - r.arrival for r in self.finished)
-        hits = [r.prefill_hit for r in self.finished]
-        lat = sorted(r.finished - r.arrival for r in self.finished)
-        n = len(waits)
-        per_prefix: dict = {}
-        for r in self.finished:
-            per_prefix.setdefault(r.prefix_id, []).append(r)
-        return {
-            "n": n,
-            "mean_wait": sum(waits) / n,
-            "p50_wait": waits[n // 2],
-            "p99_wait": waits[min(n - 1, int(n * 0.99))],
-            "max_wait": waits[-1],
-            "p99_latency": lat[min(n - 1, int(n * 0.99))],
-            "prefix_hit_rate": sum(hits) / n,
-            "throughput_rps": n / max(max(r.finished for r in self.finished),
-                                      1e-9),
-        }
-
-
-class ContinuousBatcher:
-    """Discrete-time serving simulation (1 step = 1 decode iteration).
-
-    Prefill cost (steps) = blocks * (1 - hit_fraction) * prefill_step_cost;
-    each active request decodes 1 token/step; slots = max_batch.
-    """
-
-    def __init__(self, policy: str = "reciprocating", max_batch: int = 8,
-                 pool_blocks: int = 512, prefill_cost_per_block: float = 0.25,
-                 seed: int = 0):
-        self.queue: AdmissionQueue = POLICIES[policy](seed)
-        self.policy = policy
-        self.max_batch = max_batch
-        self.pool = PrefixCachePool(pool_blocks)
+    def __init__(self, pool: PagedKVPool, prefill_cost_per_block: float):
+        self.pool = pool
         self.pc = prefill_cost_per_block
-        self.active: list = []
-        self.pending: list = []         # submitted, not yet arrived
-        self.stats = SchedulerStats()
-        self.time = 0.0
 
-    def submit(self, req: Request) -> None:
-        self.pending.append(req)        # becomes visible at req.arrival
+    def on_arrival(self, r: Request, now: float) -> None:
+        # the previous turn's decode just wrote these blocks: warm at
+        # arrival, decaying under churn while the request waits.
+        self.pool.insert(r.prefix_id, r.prefix_blocks)
 
-    def step(self) -> None:
-        self.time += 1.0
-        # arrivals become visible (O(1) doorway: arrival-stack push).
-        # Multi-turn model: a follow-up request's prefix blocks are warm AT
-        # ARRIVAL (its previous turn just decoded them) and decay under pool
-        # churn while it waits — the paper's residency-decay structure.
-        still = []
-        for r in self.pending:
-            if r.arrival <= self.time:
-                self.pool.insert(r.prefix_id, r.prefix_blocks)
-                self.queue.push(r)
-            else:
-                still.append(r)
-        self.pending = still
-        # admit into free slots
-        while len(self.active) < self.max_batch:
-            r = self.queue.pop()
-            if r is None:
-                break
-            r.admitted = self.time
-            hit = self.pool.hit_fraction(r.prefix_id, r.prefix_blocks)
-            r.prefill_hit = hit
-            miss_blocks = (r.prefix_blocks * (1 - hit)) + r.prompt_blocks
-            r._prefill_left = miss_blocks * self.pc
-            r._decode_left = r.decode_tokens
-            self.pool.insert(r.prefix_id, r.prefix_blocks)
-            self.active.append(r)
-        # run
+    def admit(self, r: Request, now: float) -> None:
+        hit = self.pool.hit_fraction(r.prefix_id, r.prefix_blocks)
+        r.prefill_hit = hit
+        miss_blocks = (r.prefix_blocks * (1 - hit)) + r.prompt_blocks
+        r._prefill_left = miss_blocks * self.pc
+        r._decode_left = r.decode_tokens
+        self.pool.insert(r.prefix_id, r.prefix_blocks)
+
+    def work(self, active: list, now: float) -> list:
         done = []
-        for r in self.active:
-            if r._prefill_left > 0:
+        for r in active:
+            if r._prefill_left > 0:     # chunked prefill: one chunk/step
                 r._prefill_left -= 1.0
                 continue
             r._decode_left -= 1
             self.pool.touch_decode(r.rid, 1)
             if r._decode_left <= 0:
-                r.finished = self.time
                 done.append(r)
-        for r in done:
-            self.active.remove(r)
-            self.stats.finished.append(r)
+        return done
+
+
+class ContinuousBatcher:
+    """Discrete-time serving simulation (1 step = 1 decode iteration)
+    over the shared ``ServeCore`` — the sim frontend of SERVING.md §1."""
+
+    def __init__(self, policy: str = "reciprocating", max_batch: int = 8,
+                 pool_blocks: int = 512, prefill_cost_per_block: float = 0.25,
+                 seed: int = 0):
+        self.pool = PagedKVPool(pool_blocks)
+        self.core = ServeCore(SimExecutor(self.pool, prefill_cost_per_block),
+                              policy=policy, max_slots=max_batch, seed=seed)
+        self.policy = policy
+        self.max_batch = max_batch
+        self.pc = prefill_cost_per_block
+
+    # thin frontend: expose the core's state under the historical names
+    @property
+    def queue(self):
+        return self.core.queue
+
+    @property
+    def active(self) -> list:
+        return self.core.active
+
+    @property
+    def pending(self) -> list:
+        return self.core.pending
+
+    @property
+    def stats(self) -> ServeStats:
+        return self.core.stats
+
+    @property
+    def time(self) -> float:
+        return self.core.time
+
+    def submit(self, req: Request) -> None:
+        self.core.submit(req)           # becomes visible at req.arrival
+
+    def step(self) -> None:
+        self.core.step()
 
     def drain(self, max_steps: int = 1_000_000) -> None:
-        steps = 0
-        while (self.active or len(self.queue) or self.pending) \
-                and steps < max_steps:
-            self.step()
-            steps += 1
+        self.core.drain(max_steps)      # raises DrainStalled on exhaustion

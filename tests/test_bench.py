@@ -66,7 +66,7 @@ def test_registry_exposes_every_lock_program():
     assert set(FIG1_ALGS) == set(PROGRAMS)
     for suite in ("paper", "mutexbench", "coherence", "fairness",
                   "atomics", "kvstore", "residency", "scheduler",
-                  "kernels", "roofline"):
+                  "serve", "kernels", "roofline"):
         assert suite in names()
 
 
