@@ -16,17 +16,21 @@ def main() -> None:
     args = ap.parse_args()
 
     print(f"{'algorithm':<15s} {'thr/kcyc':>9s} {'miss/ep':>8s} "
-          f"{'remote/ep':>9s} {'latency':>8s} {'unfair':>7s}")
+          f"{'remote/ep':>9s} {'latency':>8s} {'unfair':>7s} {'bypass':>7s}")
     for alg in ("reciprocating", "retrograde", "mcs", "clh", "hemlock",
-                "ticket", "anderson", "ttas"):
+                "ticket", "anderson", "ttas",
+                "hapax", "fissile", "spin_then_park"):
         r = bench_lock(alg, args.threads, n_steps=args.steps,
                        cost=CostModel(n_nodes=2), n_replicas=2)
         print(f"{alg:<15s} {r.throughput:>9.3f} {r.miss_per_episode:>8.2f} "
               f"{r.remote_per_episode:>9.2f} {r.latency:>8.0f} "
-              f"{r.unfairness:>7.2f}")
+              f"{r.unfairness:>7.2f} {r.bypass_bound:>7d}")
     print("\nExpect: reciprocating leads throughput with ~4 misses/episode;"
           "\nticket/ttas collapse (global spinning); unfairness ~2x for the"
-          "\nreciprocating family (paper §9.2), ~1x for FIFO locks.")
+          "\nreciprocating family (paper §9.2), ~1x for FIFO locks. Of the"
+          "\nDSL-authored variants (locks-ext): hapax stays FIFO-fair at"
+          "\nconstant cost, fissile barges (throughput up, fairness gone),"
+          "\nspin_then_park pays the park/unpark handoff tax.")
 
 
 if __name__ == "__main__":

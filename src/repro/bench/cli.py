@@ -2,7 +2,11 @@
 
 Commands:
 
-* ``list``                      — show the suite catalogue
+* ``list``                      — show the suite catalogue; ``--programs``
+                                  enumerates the registered lock specs
+                                  (phase anatomy, registers, memory
+                                  regions), ``--suites`` the suites, both
+                                  flags together show both
 * ``run --suite paper --out BENCH_paper.json``
                                 — run a suite, write the schema-valid JSON
                                   result, and (for the ``paper`` suite, or
@@ -54,11 +58,33 @@ def _build_config(args) -> registry.BenchConfig:
     return registry.BenchConfig(**kw)
 
 
-def cmd_list(_args) -> int:
-    for name in registry.names():
-        s = registry.get(name)
-        print(f"{name:12s} {s.title}")
-        print(f"{'':12s}   {s.description}")
+def cmd_list(args) -> int:
+    show_programs = getattr(args, "programs", False)
+    show_suites = getattr(args, "suites", False) or not show_programs
+    if show_suites:
+        print("# suites")
+        for name in registry.names():
+            s = registry.get(name)
+            print(f"{name:12s} {s.title}")
+            print(f"{'':12s}   {s.description}")
+    if show_programs:
+        from repro.core.locks.programs import (
+            NEW_VARIANTS, PROGRAMS, describe_program,
+        )
+        print("# lock programs (LockSpec phase anatomy — "
+              "core/locks/specs.py)")
+        for name in sorted(PROGRAMS):
+            d = describe_program(name)
+            phases = " ".join(
+                f"{p}:{len(steps)}" for p, steps in d["phases"].items()
+                if steps)
+            regions = ", ".join(f"{n}[{sz} {kind}]"
+                                for n, sz, kind in d["regions"])
+            mem = ", ".join(list(d["words"]) + ([regions] if regions else []))
+            tag = "  (new variant)" if name in NEW_VARIANTS else ""
+            print(f"{name:15s} {phases}{tag}")
+            print(f"{'':15s}   regs: {', '.join(d['regs']) or '-'}; "
+                  f"mem: {mem}")
     return 0
 
 
@@ -111,8 +137,14 @@ def build_parser() -> argparse.ArgumentParser:
                     "Table 1, fairness; see `list`).")
     sub = ap.add_subparsers(dest="command", required=True)
 
-    sub.add_parser("list", help="show the suite catalogue") \
-       .set_defaults(fn=cmd_list)
+    ls = sub.add_parser("list",
+                        help="show the suite / lock-program catalogue")
+    ls.add_argument("--suites", action="store_true",
+                    help="enumerate registered suites (the default)")
+    ls.add_argument("--programs", action="store_true",
+                    help="enumerate registered lock specs with their "
+                         "phase anatomy")
+    ls.set_defaults(fn=cmd_list)
 
     run = sub.add_parser("run", help="run a suite and write its JSON result")
     run.add_argument("--suite", required=True)

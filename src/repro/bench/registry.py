@@ -8,7 +8,7 @@ drift apart.
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, field, replace
+from dataclasses import asdict, dataclass, replace
 from typing import Callable
 
 from repro.bench import schema

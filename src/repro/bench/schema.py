@@ -36,6 +36,14 @@ heaviest load), and ``serve_engine_smoke`` (scalars — the model-backed
 paged engine run end-to-end; full runs only, values may nest one dict of
 pool counters).
 
+The ``locks-ext`` suite (DESIGN.md §L2 extended lock zoo) likewise uses
+the existing kinds: ``locksext_sweep`` (sweep — DSL-authored variants vs
+paper baselines over threads), ``locksext_profile`` (table — per-lock
+phase anatomy ``spec_steps``, coherence profile, and the observed
+``bypass_bound`` from the admission log), and ``locksext_park`` (table —
+spin_then_park throughput/latency vs the ``CostModel`` park/unpark
+costs).
+
 ``validate_result`` is the single source of truth for well-formedness;
 ``save_result``/``load_result`` refuse to write or return an invalid
 document, so a BENCH_*.json on disk is schema-valid by construction.

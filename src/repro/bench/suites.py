@@ -8,6 +8,10 @@ builders end-to-end and is what regenerates ``docs/RESULTS.md``:
   atomics      Fig. 2      lock-striped ``std::atomic<struct>`` (rw CS)
   kvstore      Fig. 3      LevelDB-readrandom analogue (read-only CS)
   coherence    Table 1     invalidations / misses per episode
+  locks-ext    beyond-paper extended lock zoo: DSL-authored variants
+               (hapax / fissile / spin_then_park, core/locks/specs.py)
+               vs the paper baselines, plus the park-cost sensitivity
+               of spin_then_park
   fairness     Table 2/§9  palindromic cycle, 2x bound, §9.4 mitigation,
                            bounded-bypass histograms (core.admission)
   residency    App. C      Jensen/decay residual-residency model
@@ -52,9 +56,13 @@ def _algs(cfg: BenchConfig, default) -> tuple:
 
 # --- figure/table builders (shared by per-figure suites and `paper`) --------
 
-def build_fig1(cfg: BenchConfig) -> list:
+def build_fig1(cfg: BenchConfig, on_result=None) -> list:
+    """``on_result`` captures the max-contention BenchResults so composed
+    suites (``paper`` -> locks-ext) can reuse the cells instead of
+    re-simulating them."""
     a = sweep.lock_sweep(_algs(cfg, FIG1_ALGS), cfg, ncs_max=0,
-                         tag="mutexbench_max_contention")
+                         tag="mutexbench_max_contention",
+                         on_result=on_result)
     b = sweep.lock_sweep(_algs(cfg, FIG1_ALGS), cfg, ncs_max=250,
                          tag="mutexbench_random_ncs")
     return [
@@ -96,6 +104,101 @@ def build_table1(cfg: BenchConfig) -> list:
         "(T=10, degenerate local CS)",
         ["lock", "miss_per_episode", "inval_per_episode",
          "remote_per_episode_numa", "paper_invalidations"], rows)]
+
+
+LOCKS_EXT_BASELINES = ("reciprocating", "mcs", "ticket")
+# (park_cost, unpark_cost) grid for the spin_then_park sensitivity table
+PARK_COSTS = ((0, 0), (10, 30), (25, 75), (50, 150), (100, 300))
+
+
+def build_locks_ext(cfg: BenchConfig, reuse_series: list | None = None,
+                    reuse_cells: dict | None = None) -> list:
+    """Extended lock zoo (DESIGN.md §L2): the three DSL-authored variants
+    against the reference trio, a phase/coherence profile table at the
+    largest thread count, and the spin_then_park park-cost sensitivity.
+
+    ``reuse_series`` / ``reuse_cells`` let the ``paper`` suite hand over
+    its already-run Fig. 1a series and per-cell BenchResults (same
+    ncs/CS/seed settings) so composed runs re-simulate nothing."""
+    from repro.core.locks.programs import NEW_VARIANTS, describe_program
+    from repro.core.sim.api import bench_lock
+    from repro.core.sim.machine import CostModel
+
+    algs = _algs(cfg, LOCKS_EXT_BASELINES + NEW_VARIANTS)
+    t_hi = max(cfg.threads)
+    cells: dict = dict(reuse_cells or {})
+    reused = {s["label"]: s for s in reuse_series or []}
+    if all(a in reused for a in algs):
+        series = [reused[a] for a in algs]
+    else:
+        series = sweep.lock_sweep(
+            algs, cfg, ncs_max=0, tag="locksext",
+            on_result=lambda a, t, r: cells.__setitem__((a, t), r))
+
+    prof_rows = []
+    for alg in algs:
+        r = cells.get((alg, t_hi))
+        cell_us = 0.0                       # reused cell: no new simulation
+        if r is None:
+            t0 = time.time()
+            r = sweep.bench_cell(alg, t_hi, cfg)
+            cell_us = (time.time() - t0) * 1e6 / max(r.episodes, 1)
+        d = describe_program(alg)
+        phases = d["phases"]
+        prof_rows.append({
+            "lock": alg,
+            "spec_steps": "/".join(
+                f"{p[0].upper()}{len(phases[p])}"
+                for p in ("doorway", "waiting", "entry", "release")),
+            "throughput": round(r.throughput, 4),
+            "miss_per_episode": round(r.miss_per_episode, 2),
+            "latency": round(r.latency, 1),
+            "unfairness": round(r.unfairness, 3),
+            "bypass_bound": r.bypass_bound,
+        })
+        if cfg.verbose:
+            emit(f"locksext/{alg}", cell_us,
+                 f"thr={r.throughput:.3f}/kcyc bypass<={r.bypass_bound}")
+
+    park_rows = []
+    costs = PARK_COSTS[1:4] if cfg.quick else PARK_COSTS
+    for park, unpark in costs:
+        r = bench_lock(
+            "spin_then_park", t_hi, n_steps=cfg.n_steps,
+            n_replicas=cfg.n_replicas, seed0=cfg.seed0,
+            cost=CostModel(n_nodes=2 if t_hi > cfg.numa_above else 1,
+                           park_cost=park, unpark_cost=unpark))
+        park_rows.append({
+            "park_cost": park, "unpark_cost": unpark,
+            "throughput": round(r.throughput, 4),
+            "latency": round(r.latency, 1),
+            "miss_per_episode": round(r.miss_per_episode, 2),
+        })
+    if cfg.verbose:
+        lo, hi = park_rows[0]["throughput"], park_rows[-1]["throughput"]
+        emit("locksext/park_sensitivity", 0.0,
+             f"thr {lo:.3f}->{hi:.3f}/kcyc over {len(park_rows)} park costs")
+
+    return [
+        sweep_experiment(
+            "locksext_sweep",
+            "Extended lock zoo — DSL-authored variants (hapax, fissile, "
+            "spin_then_park) vs paper baselines, maximal contention",
+            "threads", series),
+        table_experiment(
+            "locksext_profile",
+            f"Extended lock zoo — phase anatomy and coherence profile at "
+            f"T={t_hi} (spec_steps = steps per "
+            "Doorway/Waiting/Entry/Release phase)",
+            ["lock", "spec_steps", "throughput", "miss_per_episode",
+             "latency", "unfairness", "bypass_bound"], prof_rows),
+        table_experiment(
+            "locksext_park",
+            f"spin_then_park — throughput/latency vs park+unpark cost "
+            f"(T={t_hi}, CostModel hooks in core/sim/machine.py)",
+            ["park_cost", "unpark_cost", "throughput", "latency",
+             "miss_per_episode"], park_rows),
+    ]
 
 
 def build_fairness(cfg: BenchConfig) -> list:
@@ -466,6 +569,11 @@ register("kvstore", "KV-store readrandom (Fig. 3)",
 register("coherence", "Coherence traffic (Table 1)",
          "Invalidations / misses / NUMA-remote misses per contended "
          "episode at T=10.")(build_table1)
+register("locks-ext", "Extended lock zoo (beyond paper, DESIGN.md §L2)",
+         "DSL-authored lock variants (hapax, fissile, spin_then_park) "
+         "vs the paper baselines: thread sweep, phase/coherence profile "
+         "with the observed bypass bound, and spin_then_park park-cost "
+         "sensitivity.")(build_locks_ext)
 register("fairness", "Fairness and bounded bypass (Table 2, §9)",
          "Palindromic admission cycle, long-run unfairness, §9.4 "
          "mitigation, and bypass histograms over core.admission "
@@ -492,14 +600,22 @@ register("roofline", "Roofline aggregation",
           "End-to-end reproduction of the paper's evaluation: "
           "throughput-vs-threads for every lock program, coherence "
           "traffic, fairness and bounded-bypass histograms — plus the "
-          "beyond-paper serving section (docs/SERVING.md).",
+          "beyond-paper extended lock zoo (locks-ext) and serving "
+          "(docs/SERVING.md) sections.",
           tags=("paper",))
 def build_paper(cfg: BenchConfig) -> list:
     exps = []
-    exps += build_fig1(cfg)
+    cells: dict = {}
+    exps += build_fig1(cfg, on_result=lambda a, t, r:
+                       cells.__setitem__((a, t), r))
     exps += build_fig2(cfg)
     exps += build_fig3(cfg)
     exps += build_table1(cfg)
+    # locks-ext reuses Fig. 1a's max-contention curves and cells
+    # (identical settings) and only simulates its park extras on top.
+    fig1a = next(e for e in exps if e["name"] == "fig1a_max_contention")
+    exps += build_locks_ext(cfg, reuse_series=fig1a["series"],
+                            reuse_cells=cells)
     exps += build_fairness(cfg)
     exps += build_serve(cfg)
     return exps

@@ -44,7 +44,9 @@ def run_grid(prog, n_threads: int, n_steps: int, seeds, n_nodes,
     def go(seeds, nodes):
         def one(seed, nn):
             cm = CostModel(hit=cost.hit, local_miss=cost.local_miss,
-                           remote_miss=cost.remote_miss, n_nodes=nn)
+                           remote_miss=cost.remote_miss, n_nodes=nn,
+                           park_cost=cost.park_cost,
+                           unpark_cost=cost.unpark_cost)
             return run_machine(prog, n_threads, n_steps, cm, seed)
         return jax.vmap(one)(seeds, nodes)
 
@@ -57,7 +59,9 @@ def _tree_slice(s, sel):
 
 def bench_cell(alg: str, n_threads: int, cfg: BenchConfig, *,
                ncs_max: int = 0, cs_shared=True, n_nodes=None):
-    """One cell with the replica ensemble vmapped; returns BenchResult."""
+    """One cell with the replica ensemble vmapped; returns BenchResult.
+    (For non-default cost models — e.g. park costs — use
+    ``core.sim.api.bench_lock``, which takes a full ``CostModel``.)"""
     prog = PROGRAMS[alg](n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
     if n_nodes is None:
         n_nodes = 2 if n_threads > cfg.numa_above else 1
@@ -68,8 +72,11 @@ def bench_cell(alg: str, n_threads: int, cfg: BenchConfig, *,
 
 
 def lock_sweep(algs, cfg: BenchConfig, *, ncs_max: int = 0, cs_shared=True,
-               tag: str = "sweep") -> list:
-    """Thread sweep for each algorithm -> schema series list."""
+               tag: str = "sweep", on_result=None) -> list:
+    """Thread sweep for each algorithm -> schema series list.
+    ``on_result(alg, threads, BenchResult)`` lets a caller reuse the full
+    per-cell results (e.g. locks-ext's profile table) without re-running
+    the cells."""
     series = []
     for alg in algs:
         points = []
@@ -77,6 +84,8 @@ def lock_sweep(algs, cfg: BenchConfig, *, ncs_max: int = 0, cs_shared=True,
             t0 = time.time()
             r = bench_cell(alg, t, cfg, ncs_max=ncs_max, cs_shared=cs_shared)
             wall = time.time() - t0
+            if on_result is not None:
+                on_result(alg, t, r)
             p = {"threads": t, "episodes": r.episodes,
                  "wall_s": round(wall, 3)}
             for m in POINT_METRICS:

@@ -12,8 +12,8 @@ Shapes follow the assignment sheet verbatim (see DESIGN.md §5 for skips).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax.numpy as jnp
 

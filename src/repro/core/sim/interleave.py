@@ -16,7 +16,7 @@ Policies:
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.locks.reference import LockAlgorithm
 

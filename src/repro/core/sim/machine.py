@@ -22,16 +22,50 @@ Model (DESIGN.md §L1):
   — a woken waiter then pays the coherence miss for its re-read, exactly
   the "local spinning" accounting of the paper.
 
+Op/result-encoding contract (the single source of truth — the lock DSL
+(``core/locks/dsl.py``) and the lock specs reference this table instead of
+restating it):
+
+  kind     operands              result ``res`` fed to the next handler
+  -------  --------------------  ---------------------------------------
+  NOP      (addr ignored, use 0) mem[addr]
+  LOAD     addr                  mem[addr]
+  STORE    addr, a=value         old mem[addr] (by convention ignored)
+  XCHG     addr, a=value         old mem[addr]
+  CAS      addr, a=expect,       ``old * 2 + ok`` — the old value and the
+           b=new                 success bit packed in one word (all lock
+                                 words are small and non-negative)
+  FAA      addr, a=delta         old mem[addr]
+  SPIN_EQ  addr, a               block (zero cost) until mem[addr] == a;
+                                 res = the watched value once satisfied
+  SPIN_NE  addr, a               block until mem[addr] != a; res likewise
+  PARK_EQ  addr, a               SPIN_EQ semantics, plus the park cost
+                                 model: ``CostModel.park_cost`` is charged
+                                 when the thread blocks (the kernel-entry
+                                 syscall) and ``CostModel.unpark_cost``
+                                 when a writer wakes it (the handoff /
+                                 context-switch latency)
+  DELAY    a=cycles              advance only the issuing thread's clock;
+                                 res = mem[addr] (use addr 0)
+
+Value/address conventions shared by every program: LOCKEDEMPTY == 1 marks
+a detached-but-empty arrival word (so real element addresses must be > 1);
+word 4 is the shared CS word, word 5 the second (read-only-profile) CS
+word, words 0..3 are lock words, and per-thread wait elements live at
+addresses >= 8.
+
 Lock algorithms are table-driven state machines (``jax.lax.switch`` over a
-per-algorithm handler list — see ``core/locks/programs.py``); the engine is
-a single ``jax.lax.scan`` over micro-steps, ``jax.vmap``-able over replica
+per-algorithm handler list) authored as declarative ``LockSpec`` phase
+specs (``core/locks/dsl.py``) and lowered by ``core/locks/compile.py`` to
+the ``Program`` handler-table form below; the engine is a single
+``jax.lax.scan`` over micro-steps, ``jax.vmap``-able over replica
 ensembles and jit-compiled end to end.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +74,9 @@ I32 = jnp.int32
 F32 = jnp.float32
 INF = jnp.array(2**31 - 1, jnp.int32)
 
-# op kinds
-NOP, LOAD, STORE, XCHG, CAS, FAA, SPIN_EQ, SPIN_NE, DELAY = range(9)
+# op kinds (semantics: the contract table in the module docstring)
+NOP, LOAD, STORE, XCHG, CAS, FAA, SPIN_EQ, SPIN_NE, DELAY, PARK_EQ = \
+    range(10)
 
 
 class Op(NamedTuple):
@@ -62,6 +97,11 @@ class CostModel:
     local_miss: int = 40
     remote_miss: int = 100
     n_nodes: int = 1          # NUMA nodes (threads split contiguously)
+    # PARK_EQ hooks (spin-then-park locks): cycles charged on the blocking
+    # park itself (kernel entry) and on the wake handoff (context switch).
+    # Neither advances the coherence bus — parking is private time.
+    park_cost: int = 25
+    unpark_cost: int = 75
 
 
 @dataclass(frozen=True)
@@ -151,12 +191,13 @@ def machine_step(s: MachineState, prog: Program, cm: CostModel,
                         s.cur_op[t, 3])
     mval = s.mem[addr]
 
-    is_load = (kind == LOAD) | (kind == SPIN_EQ) | (kind == SPIN_NE)
+    is_park = kind == PARK_EQ
+    is_load = (kind == LOAD) | (kind == SPIN_EQ) | (kind == SPIN_NE) | is_park
     is_store = (kind == STORE) | (kind == XCHG) | (kind == CAS) | (kind == FAA)
     is_mem = is_load | is_store
 
     # --- spin semantics: unsatisfied -> block (woken by a write) -----------
-    spin_unsat = ((kind == SPIN_EQ) & (mval != a)) | \
+    spin_unsat = (((kind == SPIN_EQ) | is_park) & (mval != a)) | \
                  ((kind == SPIN_NE) & (mval == a))
 
     # --- cache/cost ---------------------------------------------------------
@@ -230,9 +271,13 @@ def machine_step(s: MachineState, prog: Program, cm: CostModel,
     # spin first-check also pays its read cost before blocking
     op_cost = jnp.where(kind == DELAY, a.astype(jnp.int32),
                         cost.astype(jnp.int32))
-    finish = start + op_cost
+    # a blocking PARK_EQ additionally pays the kernel-entry park cost;
+    # it is private time, so only the probe's line transfer hits the bus
+    bus_finish = start + op_cost
+    finish = bus_finish + jnp.where(is_park & spin_unsat,
+                                    jnp.int32(cm.park_cost), 0)
     # bus serializes only on misses (line transfers)
-    time = jnp.where(eff & miss | (spin_unsat & ~hit), finish, s.time)
+    time = jnp.where(eff & miss | (spin_unsat & ~hit), bus_finish, s.time)
     ready_at = s.ready_at.at[t].set(finish)
     misses_ct = s.misses.at[t].add(
         jnp.where((eff | spin_unsat) & miss, 1, 0))
@@ -245,7 +290,11 @@ def machine_step(s: MachineState, prog: Program, cm: CostModel,
     # --- wake threads blocked on this word ----------------------------------
     woke = (do_exec & writes) & s.blocked & (s.cur_op[:, 1] == addr)
     blocked = jnp.where(woke, False, s.blocked)
-    ready_at = jnp.where(woke, jnp.maximum(ready_at, finish), ready_at)
+    # unparking a PARK_EQ waiter pays the context-switch handoff latency
+    unpark_pay = jnp.where(s.cur_op[:, 0] == PARK_EQ,
+                           jnp.int32(cm.unpark_cost), 0)
+    ready_at = jnp.where(woke, jnp.maximum(ready_at, finish) + unpark_pay,
+                         ready_at)
     blocked = blocked.at[t].set(spin_unsat)
 
     # --- transition (only when the op completed) -----------------------------

@@ -5,8 +5,6 @@ cell, and the ones the real train/serve loops execute.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P

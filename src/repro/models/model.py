@@ -10,8 +10,6 @@ FSDP-sharded over ``data`` via the logical axis rules.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -19,7 +17,7 @@ from repro.configs.base import ModelConfig
 from repro.models import params as P_
 from repro.models import specs as S_
 from repro.models.layers import (
-    F32, chunked_attention, decode_attention, mlp_gelu, mlp_swiglu,
+    F32, chunked_attention, mlp_gelu, mlp_swiglu,
     moe_forward, rmsnorm, rope, scan_or_unroll, sinusoidal_pos,
 )
 from repro.models.ssm import mamba2_mixer

@@ -34,7 +34,7 @@ decode step has somewhere harmless to scatter garbage (SERVING.md §3).
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 class KVPoolExhausted(RuntimeError):

@@ -20,8 +20,7 @@ from repro.launch import steps as ST
 from repro.sharding.ctx import MeshCtx
 from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
                                     restore_checkpoint)
-from repro.train.fault_tolerance import (HeartbeatMonitor, RestartPolicy,
-                                         StepGuard)
+from repro.train.fault_tolerance import HeartbeatMonitor, StepGuard
 from repro.train.optimizer import OptConfig
 
 

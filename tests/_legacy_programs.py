@@ -1,0 +1,489 @@
+"""FROZEN pre-redesign hand-rolled handler tables — differential-test
+oracle only.
+
+This is the lock zoo exactly as it existed before the ``LockSpec`` DSL
+redesign (``core/locks/dsl.py`` + ``compile.py``). It is kept verbatim so
+``tests/test_lock_dsl.py`` can assert that every compiled spec produces
+*identical* machine metrics to the original tables on pinned seeds. Do not
+edit or extend it; new locks are authored as specs in
+``core/locks/specs.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sim.machine import (
+    CAS, DELAY, FAA, LOAD, NOP, Program, SPIN_EQ, SPIN_NE, STORE, XCHG,
+)
+
+I32 = jnp.int32
+CS = 4      # shared critical-section word
+BASE = 8    # per-thread element base
+
+
+def _i(x):
+    return jnp.asarray(x, I32)
+
+
+def _op(kind, addr=0, a=0, b=0):
+    return (_i(kind), _i(addr), _i(a), _i(b))
+
+
+def _ret(regs, pc, op, arrive=False, admit=False, rng=None):
+    return (regs, _i(pc), op, jnp.asarray(arrive, bool),
+            jnp.asarray(admit, bool), rng)
+
+
+def _xorshift(r):
+    r = r ^ (r << jnp.uint32(13))
+    r = r ^ (r >> jnp.uint32(17))
+    r = r ^ (r << jnp.uint32(5))
+    return r
+
+
+CS2 = 5     # second shared word (read-only CS profile)
+
+
+def _cs_mode(cs_shared):
+    return cs_shared if isinstance(cs_shared, str) else (
+        "rw" if cs_shared else "local")
+
+
+def _cs1(cs_shared):
+    """First CS op. Profiles: "rw" = shared-PRNG advance (MutexBench §7.1);
+    "local" = degenerate local CS (Table-1 experiment); "ro" = read-only
+    lookups (LevelDB-readrandom analogue, Fig. 3)."""
+    mode = _cs_mode(cs_shared)
+    if mode == "rw":
+        return _op(LOAD, CS, 0, 0)
+    if mode == "ro":
+        return _op(LOAD, CS, 0, 0)
+    return _op(DELAY, 0, 1, 0)
+
+
+def _cs2(cs_shared, res):
+    mode = _cs_mode(cs_shared)
+    if mode == "rw":
+        return (_i(STORE), _i(CS), res + 1, _i(0))
+    if mode == "ro":
+        return _op(LOAD, CS2, 0, 0)
+    return _op(DELAY, 0, 1, 0)
+
+
+def _ncs_handler(next_pc, ncs_max):
+    def h(t, regs, res, rng):
+        rng = _xorshift(rng)
+        d = _i(rng % jnp.uint32(max(ncs_max, 1))) * (ncs_max > 0)
+        return _ret(regs, next_pc, _op(DELAY, 0, d, 0), rng=rng)
+    return h
+
+
+def _home(n_mem, n_threads, per_thread_bases):
+    """home[w]: owning thread for per-thread words, else -1 (node 0)."""
+    home = [-1] * n_mem
+    for base in per_thread_bases:
+        for t in range(n_threads):
+            home[base + t] = t
+    return tuple(home)
+
+
+# ---------------------------------------------------------------------------
+# Reciprocating (paper Listing 1).  regs: r0=succ, r1=eos
+# ---------------------------------------------------------------------------
+def reciprocating_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    T = n_threads
+    ARR = 0
+
+    def h1(t, regs, res, rng):                    # after NCS: prepare E
+        return _ret(regs, 2, _op(STORE, BASE + t, 0, 0), rng=rng)
+
+    def h2(t, regs, res, rng):                    # after prepare: push
+        return _ret(regs, 3, _op(XCHG, ARR, BASE + t, 0), rng=rng)
+
+    def h3(t, regs, res, rng):                    # consume tail (doorway)
+        E = BASE + t
+        uncont = res == 0
+        succ = jnp.where(res <= 1, 0, res)        # coerce LOCKEDEMPTY
+        regs = regs.at[0].set(jnp.where(uncont, 0, succ))
+        regs = regs.at[1].set(jnp.where(uncont, E, 0))
+        c1 = _cs1(cs_shared)
+        kind = jnp.where(uncont, c1[0], _i(SPIN_NE))
+        addr = jnp.where(uncont, c1[1], _i(E))
+        a = jnp.where(uncont, c1[2], _i(0))
+        pc = jnp.where(uncont, _i(6), _i(4))
+        return _ret(regs, pc, (kind, addr, a, _i(0)),
+                    arrive=True, admit=uncont, rng=rng)
+
+    def h4(t, regs, res, rng):                    # woke: res = eos from Gate
+        succ = regs[0]
+        term = succ == res                        # terminus sentinel?
+        regs = regs.at[0].set(jnp.where(term, 0, succ))
+        regs = regs.at[1].set(jnp.where(term, 1, res))
+        return _ret(regs, 6, _cs1(cs_shared), admit=True, rng=rng)
+
+    def h6(t, regs, res, rng):                    # CS: advance shared PRNG
+        return _ret(regs, 7, _cs2(cs_shared, res), rng=rng)
+
+    def h7(t, regs, res, rng):                    # release
+        succ, eos = regs[0], regs[1]
+        has_succ = succ != 0
+        kind = jnp.where(has_succ, _i(STORE), _i(CAS))
+        addr = jnp.where(has_succ, succ, _i(ARR))
+        a = jnp.where(has_succ, eos, eos)         # store eos / CAS expect eos
+        b = _i(0)
+        pc = jnp.where(has_succ, _i(0), _i(8))
+        return _ret(regs, pc, (kind, addr, a, b), rng=rng)
+
+    def h8(t, regs, res, rng):                    # consume CAS old*2+ok
+        ok = (res % 2) == 1
+        kind = jnp.where(ok, _i(NOP), _i(XCHG))
+        addr = jnp.where(ok, _i(0), _i(ARR))
+        a = jnp.where(ok, _i(0), _i(1))           # detach -> LOCKEDEMPTY
+        pc = jnp.where(ok, _i(0), _i(9))
+        return _ret(regs, pc, (kind, addr, a, _i(0)), rng=rng)
+
+    def h9(t, regs, res, rng):                    # res = detached head w
+        return _ret(regs, 0, _op(STORE, res, regs[1], 0), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4,
+                _ncs_handler(1, ncs_max),  # pc5 unused filler
+                h6, h7, h8, h9)
+    n_mem = BASE + T
+    return Program(handlers=handlers, n_mem=n_mem,
+                   home=_home(n_mem, T, [BASE]), name="reciprocating")
+
+
+# ---------------------------------------------------------------------------
+# Ticket lock.  regs: r0=my ticket
+# ---------------------------------------------------------------------------
+def ticket_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    TK, GR = 0, 1
+
+    def h1(t, regs, res, rng):
+        return _ret(regs, 2, _op(FAA, TK, 1, 0), rng=rng)
+
+    def h2(t, regs, res, rng):                    # got ticket
+        regs = regs.at[0].set(res)
+        return _ret(regs, 3, _op(SPIN_EQ, GR, res, 0), arrive=True, rng=rng)
+
+    def h3(t, regs, res, rng):                    # granted
+        return _ret(regs, 4, _cs1(cs_shared), admit=True, rng=rng)
+
+    def h4(t, regs, res, rng):
+        return _ret(regs, 5, _cs2(cs_shared, res), rng=rng)
+
+    def h5(t, regs, res, rng):                    # release: grant++
+        return _ret(regs, 6, _op(LOAD, GR, 0, 0), rng=rng)
+
+    def h6(t, regs, res, rng):
+        return _ret(regs, 0, _op(STORE, GR, res + 1, 0), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4, h5, h6)
+    return Program(handlers=handlers, n_mem=BASE,
+                   home=_home(BASE, n_threads, []), name="ticket")
+
+
+# ---------------------------------------------------------------------------
+# Retrograde ticket (paper Listing 7).  regs: r0=my, r1=g-1, r2=hi, r3=tmp
+# ---------------------------------------------------------------------------
+def retrograde_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    TK, GR, TOP, BS = 0, 1, 2, 3
+
+    def h1(t, regs, res, rng):
+        return _ret(regs, 2, _op(FAA, TK, 1, 0), rng=rng)
+
+    def h2(t, regs, res, rng):
+        regs = regs.at[0].set(res)
+        return _ret(regs, 3, _op(SPIN_EQ, GR, res, 0), arrive=True, rng=rng)
+
+    def h3(t, regs, res, rng):
+        return _ret(regs, 4, _cs1(cs_shared), admit=True, rng=rng)
+
+    def h4(t, regs, res, rng):
+        return _ret(regs, 5, _cs2(cs_shared, res), rng=rng)
+
+    def h5(t, regs, res, rng):                    # release: g = grant-1
+        return _ret(regs, 6, _op(LOAD, GR, 0, 0), rng=rng)
+
+    def h6(t, regs, res, rng):
+        regs = regs.at[1].set(res - 1)
+        return _ret(regs, 7, _op(LOAD, BS, 0, 0), rng=rng)
+
+    def h7(t, regs, res, rng):                    # res = base
+        desc = regs[1] > res                      # still inside entry segment
+        kind = jnp.where(desc, _i(STORE), _i(LOAD))
+        addr = jnp.where(desc, _i(GR), _i(TOP))
+        a = jnp.where(desc, regs[1], _i(0))
+        pc = jnp.where(desc, _i(0), _i(8))
+        return _ret(regs, pc, (kind, addr, a, _i(0)), rng=rng)
+
+    def h8(t, regs, res, rng):                    # res = hi(top)
+        regs = regs.at[2].set(res)
+        return _ret(regs, 9, _op(STORE, BS, res, 0), rng=rng)
+
+    def h9(t, regs, res, rng):
+        return _ret(regs, 10, _op(LOAD, TK, 0, 0), rng=rng)
+
+    def h10(t, regs, res, rng):                   # res = tmp(ticket)
+        regs = regs.at[3].set(res)
+        return _ret(regs, 11, _op(STORE, TOP, res - 1, 0), rng=rng)
+
+    def h11(t, regs, res, rng):
+        empty = regs[3] == regs[2] + 1            # no waiters
+        kind = _i(STORE)
+        addr = jnp.where(empty, _i(TOP), _i(GR))
+        a = jnp.where(empty, regs[3], regs[3] - 1)
+        pc = jnp.where(empty, _i(12), _i(0))
+        return _ret(regs, pc, (kind, addr, a, _i(0)), rng=rng)
+
+    def h12(t, regs, res, rng):
+        return _ret(regs, 13, _op(STORE, BS, regs[3], 0), rng=rng)
+
+    def h13(t, regs, res, rng):
+        return _ret(regs, 0, _op(STORE, GR, regs[3], 0), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4, h5, h6, h7, h8,
+                h9, h10, h11, h12, h13)
+    return Program(handlers=handlers, n_mem=BASE,
+                   home=_home(BASE, n_threads, []), name="retrograde")
+
+
+# ---------------------------------------------------------------------------
+# MCS.  next[t] = BASE+t, locked[t] = BASE+T+t.  regs: r0=scratch
+# ---------------------------------------------------------------------------
+def mcs_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    T = n_threads
+    TAIL = 0
+
+    def h1(t, regs, res, rng):
+        return _ret(regs, 2, _op(STORE, BASE + t, 0, 0), rng=rng)
+
+    def h2(t, regs, res, rng):
+        return _ret(regs, 3, _op(STORE, BASE + T + t, 1, 0), rng=rng)
+
+    def h3(t, regs, res, rng):
+        return _ret(regs, 4, _op(XCHG, TAIL, BASE + t, 0), rng=rng)
+
+    def h4(t, regs, res, rng):                    # pred
+        uncont = res == 0
+        c1 = _cs1(cs_shared)
+        kind = jnp.where(uncont, c1[0], _i(STORE))
+        addr = jnp.where(uncont, c1[1], res)      # pred.next = me
+        a = jnp.where(uncont, c1[2], _i(BASE + t))
+        pc = jnp.where(uncont, _i(7), _i(5))
+        return _ret(regs, pc, (kind, addr, a, _i(0)),
+                    arrive=True, admit=uncont, rng=rng)
+
+    def h5(t, regs, res, rng):
+        return _ret(regs, 6, _op(SPIN_EQ, BASE + T + t, 0, 0), rng=rng)
+
+    def h6(t, regs, res, rng):
+        return _ret(regs, 7, _cs1(cs_shared), admit=True, rng=rng)
+
+    def h7(t, regs, res, rng):
+        return _ret(regs, 8, _cs2(cs_shared, res), rng=rng)
+
+    def h8(t, regs, res, rng):                    # release: read my next
+        return _ret(regs, 9, _op(LOAD, BASE + t, 0, 0), rng=rng)
+
+    def h9(t, regs, res, rng):
+        has = res != 0
+        kind = jnp.where(has, _i(STORE), _i(CAS))
+        addr = jnp.where(has, res + T, _i(TAIL))  # succ.locked = 0
+        a = jnp.where(has, _i(0), _i(BASE + t))
+        b = _i(0)
+        pc = jnp.where(has, _i(0), _i(10))
+        return _ret(regs, pc, (kind, addr, a, b), rng=rng)
+
+    def h10(t, regs, res, rng):                   # CAS old*2+ok
+        ok = (res % 2) == 1
+        kind = jnp.where(ok, _i(NOP), _i(SPIN_NE))
+        addr = jnp.where(ok, _i(0), _i(BASE + t))
+        pc = jnp.where(ok, _i(0), _i(11))
+        return _ret(regs, pc, (kind, addr, _i(0), _i(0)), rng=rng)
+
+    def h11(t, regs, res, rng):                   # res = next elem addr
+        return _ret(regs, 0, _op(STORE, res + T, 0, 0), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4, h5, h6, h7, h8,
+                h9, h10, h11)
+    n_mem = BASE + 2 * T
+    return Program(handlers=handlers, n_mem=n_mem,
+                   home=_home(n_mem, T, [BASE, BASE + T]), name="mcs")
+
+
+# ---------------------------------------------------------------------------
+# CLH (Scott 4.14).  nodes at BASE..BASE+T (T+1, circulate).
+# regs: r0=my node addr, r1=pred addr.  tail(0) init = dummy BASE+T.
+# ---------------------------------------------------------------------------
+def clh_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    T = n_threads
+    TAIL, HEAD = 0, 1
+
+    def h1(t, regs, res, rng):
+        node = jnp.where(regs[0] == 0, _i(BASE + t), regs[0])   # lazy init
+        regs = regs.at[0].set(node)
+        return _ret(regs, 2, (_i(STORE), node, _i(1), _i(0)), rng=rng)
+
+    def h2(t, regs, res, rng):
+        return _ret(regs, 3, (_i(XCHG), _i(TAIL), regs[0], _i(0)), rng=rng)
+
+    def h3(t, regs, res, rng):                    # pred
+        regs = regs.at[1].set(res)
+        return _ret(regs, 4, (_i(SPIN_EQ), res, _i(0), _i(0)),
+                    arrive=True, rng=rng)
+
+    def h4(t, regs, res, rng):                    # store head = my node
+        return _ret(regs, 5, (_i(STORE), _i(HEAD), regs[0], _i(0)), rng=rng)
+
+    def h5(t, regs, res, rng):                    # adopt pred node; enter CS
+        regs = regs.at[0].set(regs[1])
+        return _ret(regs, 6, _cs1(cs_shared), admit=True, rng=rng)
+
+    def h6(t, regs, res, rng):
+        return _ret(regs, 7, _cs2(cs_shared, res), rng=rng)
+
+    def h7(t, regs, res, rng):                    # release: load head
+        return _ret(regs, 8, _op(LOAD, HEAD, 0, 0), rng=rng)
+
+    def h8(t, regs, res, rng):                    # flag[head] = 0
+        return _ret(regs, 0, (_i(STORE), res, _i(0), _i(0)), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4, h5, h6, h7, h8)
+    n_mem = BASE + T + 1
+    # CLH nodes circulate: static homes become wrong over time — exactly the
+    # paper's point. Home nodes by original allocation.
+    home = list(_home(n_mem, T, [BASE]))
+    home[BASE + T] = -1
+    return Program(handlers=handlers, n_mem=n_mem, home=tuple(home),
+                   name="clh", init_mem=((TAIL, BASE + T),))
+
+
+# ---------------------------------------------------------------------------
+# HemLock.  grant[t] = BASE+t; LOCK_ID = 5.  regs: r0=pred
+# ---------------------------------------------------------------------------
+def hemlock_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    T = n_threads
+    TAIL, LOCK_ID = 0, 5
+
+    def h1(t, regs, res, rng):
+        return _ret(regs, 2, _op(XCHG, TAIL, BASE + t, 0), rng=rng)
+
+    def h2(t, regs, res, rng):                    # pred
+        uncont = res == 0
+        regs = regs.at[0].set(res)
+        c1 = _cs1(cs_shared)
+        kind = jnp.where(uncont, c1[0], _i(SPIN_EQ))
+        addr = jnp.where(uncont, c1[1], res)
+        a = jnp.where(uncont, c1[2], _i(LOCK_ID))
+        pc = jnp.where(uncont, _i(5), _i(3))
+        return _ret(regs, pc, (kind, addr, a, _i(0)),
+                    arrive=True, admit=uncont, rng=rng)
+
+    def h3(t, regs, res, rng):                    # ack: grant[pred]=0
+        return _ret(regs, 4, (_i(STORE), regs[0], _i(0), _i(0)), rng=rng)
+
+    def h4(t, regs, res, rng):
+        return _ret(regs, 5, _cs1(cs_shared), admit=True, rng=rng)
+
+    def h5(t, regs, res, rng):
+        return _ret(regs, 6, _cs2(cs_shared, res), rng=rng)
+
+    def h6(t, regs, res, rng):                    # release
+        return _ret(regs, 7, _op(CAS, TAIL, BASE + t, 0), rng=rng)
+
+    def h7(t, regs, res, rng):
+        ok = (res % 2) == 1
+        kind = jnp.where(ok, _i(NOP), _i(STORE))
+        addr = jnp.where(ok, _i(0), _i(BASE + t))
+        a = jnp.where(ok, _i(0), _i(LOCK_ID))
+        pc = jnp.where(ok, _i(0), _i(8))
+        return _ret(regs, pc, (kind, addr, a, _i(0)), rng=rng)
+
+    def h8(t, regs, res, rng):                    # wait for ack
+        return _ret(regs, 0, _op(SPIN_EQ, BASE + t, 0, 0), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4, h5, h6, h7, h8)
+    n_mem = BASE + T
+    return Program(handlers=handlers, n_mem=n_mem,
+                   home=_home(n_mem, T, [BASE]), name="hemlock")
+
+
+# ---------------------------------------------------------------------------
+# TTAS (polite test-and-test-and-set)
+# ---------------------------------------------------------------------------
+def ttas_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    W = 0
+
+    def h1(t, regs, res, rng):
+        return _ret(regs, 2, _op(SPIN_EQ, W, 0, 0), arrive=True, rng=rng)
+
+    def h2(t, regs, res, rng):
+        return _ret(regs, 3, _op(XCHG, W, 1, 0), rng=rng)
+
+    def h3(t, regs, res, rng):
+        got = res == 0
+        c1 = _cs1(cs_shared)
+        kind = jnp.where(got, c1[0], _i(SPIN_EQ))
+        addr = jnp.where(got, c1[1], _i(W))
+        a = jnp.where(got, c1[2], _i(0))
+        pc = jnp.where(got, _i(4), _i(2))
+        return _ret(regs, pc, (kind, addr, a, _i(0)), admit=got, rng=rng)
+
+    def h4(t, regs, res, rng):
+        return _ret(regs, 5, _cs2(cs_shared, res), rng=rng)
+
+    def h5(t, regs, res, rng):
+        return _ret(regs, 0, _op(STORE, W, 0, 0), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4, h5)
+    return Program(handlers=handlers, n_mem=BASE,
+                   home=_home(BASE, n_threads, []), name="ttas")
+
+
+# ---------------------------------------------------------------------------
+# Anderson array lock.  slots at BASE+i.  regs: r0=my slot addr
+# ---------------------------------------------------------------------------
+def anderson_program(n_threads: int, ncs_max: int = 0, cs_shared=True) -> Program:
+    T = n_threads
+    NXT = 0
+
+    def h1(t, regs, res, rng):
+        return _ret(regs, 2, _op(FAA, NXT, 1, 0), rng=rng)
+
+    def h2(t, regs, res, rng):
+        slot = BASE + (res % T)
+        regs = regs.at[0].set(slot)
+        return _ret(regs, 3, (_i(SPIN_EQ), slot, _i(1), _i(0)),
+                    arrive=True, rng=rng)
+
+    def h3(t, regs, res, rng):
+        return _ret(regs, 4, (_i(STORE), regs[0], _i(0), _i(0)), rng=rng)
+
+    def h4(t, regs, res, rng):
+        return _ret(regs, 5, _cs1(cs_shared), admit=True, rng=rng)
+
+    def h5(t, regs, res, rng):
+        return _ret(regs, 6, _cs2(cs_shared, res), rng=rng)
+
+    def h6(t, regs, res, rng):                    # release: next slot = 1
+        nxt = BASE + ((regs[0] - BASE + 1) % T)
+        return _ret(regs, 0, (_i(STORE), nxt, _i(1), _i(0)), rng=rng)
+
+    handlers = (_ncs_handler(1, ncs_max), h1, h2, h3, h4, h5, h6)
+    n_mem = BASE + T
+    return Program(handlers=handlers, n_mem=n_mem,
+                   home=_home(n_mem, T, []), name="anderson",
+                   init_mem=((BASE, 1),))
+
+
+LEGACY_PROGRAMS = {
+    "reciprocating": reciprocating_program,
+    "ticket": ticket_program,
+    "retrograde": retrograde_program,
+    "mcs": mcs_program,
+    "clh": clh_program,
+    "hemlock": hemlock_program,
+    "ttas": ttas_program,
+    "anderson": anderson_program,
+}

@@ -66,8 +66,39 @@ def test_registry_exposes_every_lock_program():
     assert set(FIG1_ALGS) == set(PROGRAMS)
     for suite in ("paper", "mutexbench", "coherence", "fairness",
                   "atomics", "kvstore", "residency", "scheduler",
-                  "serve", "kernels", "roofline"):
+                  "serve", "kernels", "roofline", "locks-ext"):
         assert suite in names()
+
+
+def test_cli_list_programs_and_suites(capsys):
+    assert cli_main(["list", "--programs"]) == 0
+    out = capsys.readouterr().out
+    assert "# lock programs" in out and "# suites" not in out
+    for name in PROGRAMS:
+        assert name in out
+    assert "doorway:" in out and "(new variant)" in out
+    # default stays suites-only (backwards compatible)
+    assert cli_main(["list"]) == 0
+    out = capsys.readouterr().out
+    assert "# suites" in out and "# lock programs" not in out
+    # both flags => both catalogues
+    assert cli_main(["list", "--suites", "--programs"]) == 0
+    out = capsys.readouterr().out
+    assert "# suites" in out and "# lock programs" in out
+    assert "locks-ext" in out
+
+
+def test_locks_ext_suite_tiny():
+    doc = run_suite("locks-ext", TINY)
+    assert validate_result(doc) == []
+    by = {e["name"]: e for e in doc["experiments"]}
+    labels = {s["label"] for s in by["locksext_sweep"]["series"]}
+    assert {"hapax", "fissile", "spin_then_park"} <= labels
+    prof = {r["lock"]: r for r in by["locksext_profile"]["rows"]}
+    assert prof["ticket"]["bypass_bound"] <= 2       # FIFO stays bounded
+    assert all("spec_steps" in r for r in by["locksext_profile"]["rows"])
+    assert len(by["locksext_park"]["rows"]) >= 3
+    assert "| lock |" in render_markdown(doc)
 
 
 def test_bypass_bounds_match_paper():

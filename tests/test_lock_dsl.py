@@ -1,0 +1,258 @@
+"""Differential and property tests for the LockSpec phase DSL
+(core/locks/dsl.py, compile.py, specs.py).
+
+* **Differential**: every re-expressed paper lock compiles to a program
+  whose machine states are *bit-identical* to the frozen pre-redesign
+  hand-rolled handler tables (``tests/_legacy_programs.py``) on pinned
+  seeds, across CS profiles and thread counts — the redesign is a pure
+  re-authoring, and ``summarize_ensemble`` therefore yields identical
+  ``BenchResult`` metrics.
+* **Invariants** (every compiled spec, new variants included): mutual
+  exclusion on the shared CS word, progress / no lost wakeups, and the
+  observed single-thread admission-interleave bound (<= 2 for the
+  reciprocating family — the paper's §2 bypass <= 1 plus one legitimate
+  turn — and <= 1 for the strict-FIFO locks).
+* **New-variant behaviour**: hapax is FIFO-fair with T-independent
+  coherence cost; fissile's barging TS fast path buys throughput at a
+  fairness cost; spin_then_park's park/unpark CostModel hooks are
+  measurable.
+* **DSL quality**: authoring mistakes (unknown label/register, missing
+  release phase, bad phase name, dangling fallthrough) are compile-time
+  ``SpecError``s, and specs are introspectable for the CLI catalogue.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _legacy_programs import LEGACY_PROGRAMS
+from repro.core.locks.compile import compile_spec, describe_spec
+from repro.core.locks.dsl import NCS, NOP, STORE, SpecError
+from repro.core.locks.programs import NEW_VARIANTS, PROGRAMS
+from repro.core.sim.api import (
+    admission_bypass_bound, bench_lock, summarize_ensemble,
+)
+from repro.core.sim.machine import CostModel, run_machine
+
+PAPER_ALGS = sorted(LEGACY_PROGRAMS)
+ALL_ALGS = sorted(PROGRAMS)
+
+# Machine-state fields that constitute "the metrics": everything
+# summarize_ensemble aggregates, plus memory and the admission log.
+STATE_FIELDS = ("mem", "episodes", "misses", "remote", "inval_recv",
+                "lat_sum", "adm_log", "adm_cnt", "time")
+
+
+def _run(prog, T, steps, seed, n_nodes=1):
+    cm = CostModel(n_nodes=n_nodes)
+    return jax.jit(lambda: run_machine(prog, T, steps, cm, seed))()
+
+
+# --- differential: compiled specs vs the frozen seed tables -----------------
+
+@pytest.mark.parametrize("name", PAPER_ALGS)
+def test_spec_identical_to_seed_tables(name):
+    """Pinned-seed 2-thread sweep over the CS profiles, plus a contended
+    6-thread NUMA cell: state-for-state equality with the pre-DSL zoo."""
+    cases = [(2, dict(cs_shared=True)), (2, dict(cs_shared=False)),
+             (2, dict(cs_shared="ro", ncs_max=60)), (2, dict(ncs_max=120)),
+             (6, dict(cs_shared=False))]
+    for T, kw in cases:
+        legacy = LEGACY_PROGRAMS[name](T, **kw)
+        spec = PROGRAMS[name](T, **kw)
+        for seed in (0, 3):
+            sl = _run(legacy, T, 2500, seed, n_nodes=2)
+            sn = _run(spec, T, 2500, seed, n_nodes=2)
+            for f in STATE_FIELDS:
+                assert np.array_equal(np.asarray(getattr(sl, f)),
+                                      np.asarray(getattr(sn, f))), \
+                    (name, T, kw, seed, f)
+
+
+@pytest.mark.parametrize("name", ["reciprocating", "mcs"])
+def test_benchresult_identical_to_seed_tables(name):
+    """The aggregated BenchResult (the numbers RESULTS.md prints) is
+    identical too, on a pinned 2-seed ensemble."""
+    T = 4
+
+    def ensemble(builder):
+        runs = [_run(builder(T, ncs_max=0, cs_shared=True), T, 3000, s)
+                for s in (0, 1)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *runs)
+
+    rl = summarize_ensemble(name, T, ensemble(LEGACY_PROGRAMS[name]))
+    rn = summarize_ensemble(name, T, ensemble(PROGRAMS[name]))
+    for f in ("throughput", "episodes", "miss_per_episode",
+              "inval_per_episode", "remote_per_episode", "latency",
+              "unfairness", "bypass_bound"):
+        assert getattr(rl, f) == getattr(rn, f), (name, f)
+    assert np.array_equal(rl.admissions, rn.admissions)
+
+
+# --- invariants for every compiled spec -------------------------------------
+
+@pytest.mark.parametrize("name", ALL_ALGS)
+def test_mutual_exclusion_on_cs_word(name):
+    """mem[CS] counts successful read-modify-write episodes; any mutual
+    exclusion violation loses updates and breaks the equality (modulo the
+    <= T threads still inside the CS at the horizon)."""
+    T = 5
+    s = _run(PROGRAMS[name](T, ncs_max=0, cs_shared=True), T, 8000, 1)
+    eps, cs = int(s.episodes.sum()), int(s.mem[4])
+    assert eps > 50, f"{name}: no progress"
+    assert eps - T <= cs <= eps + T, (name, cs, eps)
+
+
+@pytest.mark.parametrize("name", ALL_ALGS)
+def test_progress_no_lost_wakeups(name):
+    """A lost wakeup wedges the system; doubling the horizon must keep
+    completing episodes at a comparable rate."""
+    T = 4
+    prog = PROGRAMS[name](T, ncs_max=0, cs_shared=False)
+    e1 = int(_run(prog, T, 5000, 2).episodes.sum())
+    e2 = int(_run(prog, T, 10000, 2).episodes.sum())
+    assert e1 > 20, f"{name}: wedged early"
+    assert e2 > e1 * 1.5, (name, e1, e2)
+
+
+def test_admission_interleave_bounds():
+    """Observed single-thread admission-interleave bound from the machine
+    admission log (``admission_bypass_bound``): <= 2 for the reciprocating
+    family (paper §2: one bypass + one legitimate turn), <= 1 for the
+    strict-FIFO locks — including the new hapax and spin_then_park."""
+    segment = {"reciprocating": 2, "retrograde": 2}
+    fifo = {"ticket": 1, "mcs": 1, "clh": 1, "hemlock": 1, "anderson": 1,
+            "hapax": 1, "spin_then_park": 1}
+    for name, bound in {**segment, **fifo}.items():
+        s = _run(PROGRAMS[name](6, ncs_max=0, cs_shared=False), 6, 30000, 0)
+        got = admission_bypass_bound(s.adm_log, s.adm_cnt)
+        assert got <= bound, (name, got, bound)
+        assert int(s.adm_cnt) >= 512      # the log window actually filled
+    # fissile's barging fast path is visibly *not* FIFO
+    s = _run(PROGRAMS["fissile"](6, ncs_max=0, cs_shared=False), 6, 30000, 0)
+    assert admission_bypass_bound(s.adm_log, s.adm_cnt) > 2
+
+
+# --- new-variant behaviour ---------------------------------------------------
+
+def test_hapax_fifo_fair_constant_paths():
+    r8 = bench_lock("hapax", 8, n_steps=20_000, n_replicas=2,
+                    cost=CostModel(n_nodes=1))
+    r16 = bench_lock("hapax", 16, n_steps=30_000, n_replicas=2,
+                     cost=CostModel(n_nodes=1))
+    assert r8.unfairness < 1.1                     # FIFO-fair
+    assert r8.bypass_bound <= 1
+    # value-based admission keeps coherence cost T-independent
+    assert abs(r16.miss_per_episode - r8.miss_per_episode) < 1.0
+
+
+def test_fissile_fast_path_and_barging():
+    r1 = bench_lock("fissile", 1, n_steps=4000, n_replicas=1,
+                    cost=CostModel(n_nodes=1))
+    assert r1.miss_per_episode < 0.5               # uncontended TS path
+    rf = bench_lock("fissile", 12, n_steps=20_000, n_replicas=2)
+    rt = bench_lock("ticket", 12, n_steps=20_000, n_replicas=2)
+    assert rf.throughput > rt.throughput * 2       # barging buys throughput
+    assert rf.unfairness > rt.unfairness + 0.5     # ...at a fairness cost
+
+
+def test_spin_then_park_cost_hooks_measurable():
+    """The CostModel park/unpark hooks change what the machine measures:
+    dearer unpark lengthens acquire latency and, once it exceeds the
+    release-path overlap, drops throughput."""
+    free = bench_lock("spin_then_park", 8, n_steps=12_000, n_replicas=2,
+                      cost=CostModel(n_nodes=1, park_cost=0, unpark_cost=0))
+    dear = bench_lock("spin_then_park", 8, n_steps=12_000, n_replicas=2,
+                      cost=CostModel(n_nodes=1, park_cost=25,
+                                     unpark_cost=300))
+    assert dear.latency > free.latency * 1.2
+    assert dear.throughput < free.throughput * 0.9
+
+
+# --- DSL quality: compile-time errors and introspection ----------------------
+
+def test_compile_time_spec_errors():
+    def no_release(s):
+        @s.step("doorway")
+        def a(c):
+            return c.op(NOP(), to=NCS)
+
+    def bad_phase(s):
+        @s.step("loitering")
+        def a(c):
+            return c.op(NOP(), to=NCS)
+
+    def bad_label(s):
+        @s.step("doorway")
+        def a(c):
+            return c.op(NOP(), to="nowhere")
+
+        @s.step("release")
+        def b(c):
+            return c.op(NOP(), to=NCS)
+
+    def bad_register(s):
+        @s.step("release")
+        def a(c):
+            c.r.ghost = 1
+            return c.op(NOP(), to=NCS)
+
+    def dangling_fallthrough(s):
+        @s.step("release")
+        def a(c):
+            return c.op(NOP())          # last step cannot fall through
+
+    def too_many_words(s):
+        for i in range(5):
+            s.word(f"w{i}")
+
+        @s.step("release")
+        def a(c):
+            return c.op(NOP(), to=NCS)
+
+    for author in (no_release, bad_phase, bad_label, bad_register,
+                   dangling_fallthrough, too_many_words):
+        with pytest.raises(SpecError):
+            compile_spec(author, 2)
+
+
+def test_custom_spec_end_to_end():
+    """The README quickstart path: author a minimal lock, compile it, run
+    it un-registered through bench_lock — in ~15 lines."""
+    def tas(s):
+        flag = s.word("flag")
+
+        @s.step("entry")
+        def grab(c):
+            from repro.core.locks.dsl import XCHG
+            return c.op(XCHG(flag, 1), arrive=True)
+
+        @s.step("entry")
+        def check(c):
+            got = c.res == 0
+            return c.when(got, c.enter_cs(admit=True),
+                          c.op(NOP(), to="grab"))
+
+        @s.step("release")
+        def unlock(c):
+            return c.op(STORE(flag, 0), to=NCS)
+
+    from functools import partial
+    r = bench_lock("tas", 4, n_steps=6000, n_replicas=1,
+                   cost=CostModel(n_nodes=1),
+                   builder=partial(compile_spec, tas))
+    assert r.episodes > 100
+    assert r.name == "tas"
+
+
+def test_describe_spec_summary():
+    from repro.core.locks.specs import SPECS
+    d = describe_spec(SPECS["reciprocating"], n_threads=4)
+    assert d["name"] == "reciprocating"
+    assert d["phases"]["doorway"] == ["prepare", "push", "consume_tail"]
+    assert d["regs"] == ["succ", "eos"]
+    assert ("element", 4, "per-thread") in d["regions"]
+    for name in ALL_ALGS:
+        dd = describe_spec(SPECS[name], n_threads=2)
+        assert dd["phases"]["release"], name     # release phase everywhere
+    assert set(NEW_VARIANTS) <= set(ALL_ALGS)

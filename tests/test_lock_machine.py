@@ -9,7 +9,6 @@ Validates machine-level invariants and the paper's quantitative claims:
 * bounded bypass on the machine's admission log.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
