@@ -27,6 +27,7 @@ SECTIONS = {
     "kvstore": ("kvstore", "fig3_kvstore"),
     "atomics": ("atomics", "fig2_atomics"),
     "mutexbench": ("mutexbench", "mutexbench"),
+    "topology": ("topology", "topology_grid"),
     "roofline": ("roofline", "roofline_table"),
 }
 

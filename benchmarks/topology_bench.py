@@ -1,0 +1,18 @@
+"""Machine-topology sweep: every lock across SMP / NUMA / clustered-CCX
+machine models, remote-miss scaling vs node count, placement sensitivity
+(DESIGN.md §L1).
+
+Shim over the registered ``topology`` suite (``repro/bench/suites.py``);
+prefer ``PYTHONPATH=src python -m repro.bench run --suite topology``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_suite_main
+
+
+def main() -> dict:
+    return run_suite_main("topology", artifact="topology_grid")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,27 +1,39 @@
 """Lock playground: compare every algorithm on the coherence machine and
-watch the paper's phenomena appear.
+watch the paper's phenomena appear. Pick the machine with ``--topology``
+(`flat:2` = the historical 2-node flat model; try `epyc-2s`, `smp:16`,
+`numa:4x4`, `ccx` — catalogue: `python -m repro.bench list --topologies`).
 
 Run:  PYTHONPATH=src python examples/lock_playground.py [--threads 16]
 """
 import argparse
 
-from repro.core.sim.api import bench_lock
+from repro.core.sim.engine import SimEngine, Workload
 from repro.core.sim.machine import CostModel
+from repro.core.sim.topology import resolve
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threads", type=int, default=16)
     ap.add_argument("--steps", type=int, default=20_000)
+    ap.add_argument("--topology", default="flat:2",
+                    help="machine model: flat:N or a topology preset/"
+                         "shorthand (see `repro.bench list --topologies`)")
     args = ap.parse_args()
+    if args.topology.startswith("flat"):
+        _, _, n = args.topology.partition(":")
+        machine = CostModel(n_nodes=int(n or 2))
+    else:
+        machine = resolve(args.topology)
 
     print(f"{'algorithm':<15s} {'thr/kcyc':>9s} {'miss/ep':>8s} "
           f"{'remote/ep':>9s} {'latency':>8s} {'unfair':>7s} {'bypass':>7s}")
     for alg in ("reciprocating", "retrograde", "mcs", "clh", "hemlock",
                 "ticket", "anderson", "ttas",
                 "hapax", "fissile", "spin_then_park"):
-        r = bench_lock(alg, args.threads, n_steps=args.steps,
-                       cost=CostModel(n_nodes=2), n_replicas=2)
+        eng = SimEngine(alg, topology=machine, n_threads=args.threads,
+                        workload=Workload(n_steps=args.steps))
+        r = eng.ensemble(range(2))
         print(f"{alg:<15s} {r.throughput:>9.3f} {r.miss_per_episode:>8.2f} "
               f"{r.remote_per_episode:>9.2f} {r.latency:>8.0f} "
               f"{r.unfairness:>7.2f} {r.bypass_bound:>7d}")

@@ -11,19 +11,22 @@ import threading
 
 from repro.core.locks.reference import ALGORITHMS
 from repro.core.runtime.reciprocating import ReciprocatingLock
-from repro.core.sim.api import bench_lock
+from repro.core.sim.engine import SimEngine, Workload
 from repro.core.sim.interleave import run as ref_run
-from repro.core.sim.machine import CostModel
+from repro.core.sim.topology import smp
 
 
 def main() -> None:
     # --- 1a. coherence machine: Table 1 -----------------------------------
-    r = bench_lock("reciprocating", 10, n_steps=15_000, cs_shared=False,
-                   cost=CostModel(n_nodes=1), n_replicas=1)
+    # SimEngine is the session API: pick a lock, a machine topology and a
+    # workload, then run/ensemble/grid (DESIGN.md §L1).
+    wl = Workload(ncs_max=0, cs="local", n_steps=15_000)
+    r = SimEngine("reciprocating", topology=smp(10), n_threads=10,
+                  workload=wl).run(seed=0)
     print(f"[sim] reciprocating: {r.miss_per_episode:.2f} coherence misses "
           f"per contended episode (paper Table 1: 4)")
-    r2 = bench_lock("clh", 10, n_steps=15_000, cs_shared=False,
-                    cost=CostModel(n_nodes=1), n_replicas=1)
+    r2 = SimEngine("clh", topology=smp(10), n_threads=10,
+                   workload=wl).run(seed=0)
     print(f"[sim] clh:           {r2.miss_per_episode:.2f} (paper: 5)")
 
     # --- 1b. Table 2 palindrome -------------------------------------------

@@ -1,0 +1,67 @@
+"""Topology tour: one lock, many machines, one compile.
+
+Walks the machine-model layer (DESIGN.md §L1):
+
+1. pick machines — presets, factories, shorthand strings;
+2. run one lock across all of them with ``SimEngine.grid`` (the seed and
+   topology axes are stacked cost-matrix data, so the whole grid is a
+   single XLA program);
+3. see the paper's remote-miss story fall out: queue locks keep O(1)
+   remote transfers per episode while global spinning scales with the
+   machine's NUMA spread — and thread *placement* alone moves the
+   numbers.
+
+Run: PYTHONPATH=src python examples/topology_tour.py [--threads 8]
+"""
+import argparse
+
+from repro.core.sim.engine import SimEngine, Workload
+from repro.core.sim.topology import PRESETS, ccx, numa, smp
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=10_000)
+    ap.add_argument("--locks", default="reciprocating,mcs,ticket")
+    args = ap.parse_args()
+    T = args.threads
+
+    # 1. machines: a degenerate SMP box, two NUMA shapes, a chiplet part
+    #    with scatter pinning, and a named real-machine profile.
+    machines = [
+        smp(T),
+        numa(2, (T + 1) // 2),
+        numa(4, (T + 3) // 4),
+        ccx(sockets=2, ccx_per_socket=2, per_ccx=(T + 3) // 4),
+        numa(2, (T + 1) // 2).interleave(),
+        "epyc-2s",                       # preset name (list --topologies)
+    ]
+    print("machines:")
+    for m in machines:
+        t = PRESETS[m] if isinstance(m, str) else m
+        print(f"  {t.name:22s} {t.summary()}")
+
+    # 2. one grid per lock: seeds x machines in a single jit.
+    print(f"\n{'lock':15s} {'machine':22s} {'thr/kcyc':>9s} "
+          f"{'miss/ep':>8s} {'remote/ep':>9s}")
+    for lock in args.locks.split(","):
+        eng = SimEngine(lock, n_threads=T,
+                        workload=Workload(0, "local", args.steps))
+        g = eng.grid(seeds=range(3), topologies=machines)
+        for c in g:
+            r = c.result
+            print(f"{lock:15s} {c.topology:22s} {r.throughput:9.3f} "
+                  f"{r.miss_per_episode:8.2f} {r.remote_per_episode:9.2f}")
+        print(f"{'':15s} ({len(machines)} machines x 3 seeds = "
+              f"{g.compiles} XLA compile)")
+
+    print("\nReading the table: miss/ep is machine-invariant (the lock's "
+          "algorithmic coherence cost); remote/ep and throughput are "
+          "topology effects. Queue locks hold remote/ep ~O(1) as the "
+          "machine fragments; interleaved placement splits neighbours "
+          "across sockets and global spinning pays for it.")
+
+
+if __name__ == "__main__":
+    main()

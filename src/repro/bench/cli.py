@@ -5,8 +5,9 @@ Commands:
 * ``list``                      — show the suite catalogue; ``--programs``
                                   enumerates the registered lock specs
                                   (phase anatomy, registers, memory
-                                  regions), ``--suites`` the suites, both
-                                  flags together show both
+                                  regions), ``--topologies`` the machine
+                                  topology presets, ``--suites`` the
+                                  suites; flags combine
 * ``run --suite paper --out BENCH_paper.json``
                                 — run a suite, write the schema-valid JSON
                                   result, and (for the ``paper`` suite, or
@@ -60,7 +61,9 @@ def _build_config(args) -> registry.BenchConfig:
 
 def cmd_list(args) -> int:
     show_programs = getattr(args, "programs", False)
-    show_suites = getattr(args, "suites", False) or not show_programs
+    show_topologies = getattr(args, "topologies", False)
+    show_suites = (getattr(args, "suites", False)
+                   or not (show_programs or show_topologies))
     if show_suites:
         print("# suites")
         for name in registry.names():
@@ -85,6 +88,14 @@ def cmd_list(args) -> int:
             print(f"{name:15s} {phases}{tag}")
             print(f"{'':15s}   regs: {', '.join(d['regs']) or '-'}; "
                   f"mem: {mem}")
+    if show_topologies:
+        from repro.core.sim.topology import catalogue
+        print("# machine topologies (core/sim/topology.py; outermost "
+              "tier first, @cost = transfer cycles, * = NUMA-remote)")
+        for name, summary in catalogue():
+            print(f"{name:12s} {summary}")
+        print(f"{'':12s} pass presets/shorthand to SimEngine(topology=...) "
+              "or bench_lock(cost=...)")
     return 0
 
 
@@ -144,6 +155,9 @@ def build_parser() -> argparse.ArgumentParser:
     ls.add_argument("--programs", action="store_true",
                     help="enumerate registered lock specs with their "
                          "phase anatomy")
+    ls.add_argument("--topologies", action="store_true",
+                    help="enumerate the machine-topology preset "
+                         "catalogue (core/sim/topology.py)")
     ls.set_defaults(fn=cmd_list)
 
     run = sub.add_parser("run", help="run a suite and write its JSON result")

@@ -44,6 +44,14 @@ phase anatomy ``spec_steps``, coherence profile, and the observed
 spin_then_park throughput/latency vs the ``CostModel`` park/unpark
 costs).
 
+The ``topology`` suite (DESIGN.md §L1 machine models) also reuses the
+existing kinds: ``topology_grid`` (table — every lock across the
+SMP/NUMA/CCX/interleaved machine roster), ``topology_remote_scaling``
+(sweep over ``nodes`` — remote misses per episode vs NUMA node count),
+``topology_placement`` (table — contiguous vs interleaved pinning), and
+``topology_compile`` (scalars — the SimEngine.grid one-jit-per-shape
+compile accounting that CI asserts on).
+
 ``validate_result`` is the single source of truth for well-formedness;
 ``save_result``/``load_result`` refuse to write or return an invalid
 document, so a BENCH_*.json on disk is schema-valid by construction.

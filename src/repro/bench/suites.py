@@ -12,6 +12,11 @@ builders end-to-end and is what regenerates ``docs/RESULTS.md``:
                (hapax / fissile / spin_then_park, core/locks/specs.py)
                vs the paper baselines, plus the park-cost sensitivity
                of spin_then_park
+  topology     §3/§8 machine-model sweep: every lock on SMP vs 2/4-node
+               NUMA vs clustered-CCX (core/sim/topology.py presets),
+               remote-miss scaling vs node count, contiguous vs
+               interleaved placement — all through SimEngine.grid
+               (one jit per grid shape)
   fairness     Table 2/§9  palindromic cycle, 2x bound, §9.4 mitigation,
                            bounded-bypass histograms (core.admission)
   residency    App. C      Jensen/decay residual-residency model
@@ -21,7 +26,8 @@ builders end-to-end and is what regenerates ``docs/RESULTS.md``:
                (docs/SERVING.md)
   kernels      beyond-paper serpentine DMA savings accounting
   roofline     EXPERIMENTS  dry-run artifact aggregation
-  paper        Figs 1-3 + Table 1 + fairness/bypass + serve, one document
+  paper        Figs 1-3 + Table 1 + topology + fairness/bypass + serve,
+               one document
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ import glob
 import json
 import os
 import time
+from dataclasses import replace
 
 import numpy as np
 
@@ -37,6 +44,9 @@ from repro.bench.registry import BenchConfig, emit, register
 from repro.bench.schema import (
     hist_experiment, scalars_experiment, sweep_experiment, table_experiment,
 )
+from repro.core.sim import topology as topo
+from repro.core.sim.engine import Workload, session
+from repro.core.sim.machine import CostModel
 
 # Lock subsets mirroring what each paper figure actually plots.
 FIG1_ALGS = sweep.ALL_ALGS                      # every registered program
@@ -121,8 +131,6 @@ def build_locks_ext(cfg: BenchConfig, reuse_series: list | None = None,
     its already-run Fig. 1a series and per-cell BenchResults (same
     ncs/CS/seed settings) so composed runs re-simulate nothing."""
     from repro.core.locks.programs import NEW_VARIANTS, describe_program
-    from repro.core.sim.api import bench_lock
-    from repro.core.sim.machine import CostModel
 
     algs = _algs(cfg, LOCKS_EXT_BASELINES + NEW_VARIANTS)
     t_hi = max(cfg.threads)
@@ -162,12 +170,16 @@ def build_locks_ext(cfg: BenchConfig, reuse_series: list | None = None,
 
     park_rows = []
     costs = PARK_COSTS[1:4] if cfg.quick else PARK_COSTS
-    for park, unpark in costs:
-        r = bench_lock(
-            "spin_then_park", t_hi, n_steps=cfg.n_steps,
-            n_replicas=cfg.n_replicas, seed0=cfg.seed0,
-            cost=CostModel(n_nodes=2 if t_hi > cfg.numa_above else 1,
-                           park_cost=park, unpark_cost=unpark))
+    base = sweep.default_machine(cfg, t_hi)
+    # the whole park-cost axis is one stacked-topology grid (one jit):
+    # dataclasses.replace keeps every other CostModel field intact
+    g = session("spin_then_park").grid(
+        seeds=range(cfg.seed0, cfg.seed0 + cfg.n_replicas),
+        topologies=[replace(base, park_cost=p, unpark_cost=u)
+                    for p, u in costs],
+        workloads=[Workload(0, True, cfg.n_steps)], threads=[t_hi])
+    for (park, unpark), cell in zip(costs, g.cells):
+        r = cell.result
         park_rows.append({
             "park_cost": park, "unpark_cost": unpark,
             "throughput": round(r.throughput, 4),
@@ -198,6 +210,123 @@ def build_locks_ext(cfg: BenchConfig, reuse_series: list | None = None,
             f"(T={t_hi}, CostModel hooks in core/sim/machine.py)",
             ["park_cost", "unpark_cost", "throughput", "latency",
              "miss_per_episode"], park_rows),
+    ]
+
+
+# Locks whose remote-miss scaling the paper contrasts (§3, Table 1).
+TOPOLOGY_FOCUS = ("reciprocating", "mcs", "ticket")
+TOPOLOGY_NODE_COUNTS = (1, 2, 4, 8)
+
+
+def topology_machines(n_threads: int) -> list:
+    """The suite's machine roster, sized so ``n_threads`` always fits:
+    degenerate SMP, 2- and 4-node NUMA, and a clustered-CCX part."""
+    per2 = max((n_threads + 1) // 2, 1)
+    per4 = max((n_threads + 3) // 4, 1)
+    return [topo.smp(n_threads), topo.numa(2, per2), topo.numa(4, per4),
+            topo.ccx(sockets=2, ccx_per_socket=2, per_ccx=per4)]
+
+
+def build_topology(cfg: BenchConfig) -> list:
+    """Topology suite (DESIGN.md §L1): every lock across the machine
+    roster, remote-miss scaling vs NUMA node count, and contiguous vs
+    interleaved placement — each lock's whole machine grid is ONE
+    ``SimEngine.grid`` call (seed x topology stacked into a single jit),
+    and the compile accounting is exported so batching regressions are
+    visible in the results document."""
+    algs = _algs(cfg, sweep.ALL_ALGS)
+    t_hi = min(16, max(max(cfg.threads), 4))
+    seeds = range(cfg.seed0, cfg.seed0 + cfg.n_replicas)
+    wl = Workload(0, False, cfg.n_steps, label="local_cs")
+    machines = topology_machines(t_hi)
+    machines.append(machines[1].interleave())     # numa2 + scatter pinning
+
+    grid_rows, compiles, grids, points = [], 0, 0, 0
+    for alg in algs:
+        t0 = time.time()
+        g = session(alg).grid(seeds=seeds, topologies=machines,
+                              workloads=[wl], threads=[t_hi])
+        compiles += g.compiles
+        grids += 1
+        points += len(machines) * cfg.n_replicas
+        for c in g.cells:
+            grid_rows.append({
+                "lock": alg, "topology": c.topology,
+                "throughput": round(c.result.throughput, 4),
+                "miss_per_episode": round(c.result.miss_per_episode, 2),
+                "remote_per_episode":
+                    round(c.result.remote_per_episode, 2),
+                "latency": round(c.result.latency, 1),
+            })
+        if cfg.verbose:
+            base = g.cell(topology=machines[0].name).result
+            worst = max(g.results(), key=lambda r: r.remote_per_episode)
+            emit(f"topology/{alg}",
+                 (time.time() - t0) * 1e6 / max(base.episodes, 1),
+                 f"smp={base.throughput:.3f}/kcyc "
+                 f"worst_remote/ep={worst.remote_per_episode:.2f} "
+                 f"jits={g.compiles}")
+
+    # remote-miss scaling vs node count: flat machines as pure data, so
+    # the whole node axis shares one jit per lock
+    focus = [a for a in TOPOLOGY_FOCUS if a in algs] or list(algs[:1])
+    node_series = []
+    for alg in focus:
+        g = session(alg).grid(
+            seeds=seeds,
+            topologies=[CostModel(n_nodes=k)
+                        for k in TOPOLOGY_NODE_COUNTS],
+            workloads=[wl], threads=[t_hi])
+        compiles += g.compiles
+        grids += 1
+        points += len(TOPOLOGY_NODE_COUNTS) * cfg.n_replicas
+        node_series.append({"label": alg, "points": [
+            {"nodes": k,
+             "remote_per_episode": round(c.result.remote_per_episode, 3),
+             "throughput": round(c.result.throughput, 4)}
+            for k, c in zip(TOPOLOGY_NODE_COUNTS, g.cells)]})
+
+    placements = {machines[1].name: "contiguous",
+                  machines[-1].name: "interleaved"}
+    placement_rows = [
+        {"lock": r["lock"], "placement": placements[r["topology"]],
+         "throughput": r["throughput"],
+         "remote_per_episode": r["remote_per_episode"]}
+        for r in grid_rows
+        if r["lock"] in focus and r["topology"] in placements]
+
+    stats = {
+        "grids": grids, "grid_points": points, "xla_compiles": compiles,
+        "compiles_per_grid": round(compiles / max(grids, 1), 3),
+        "machines": [m.name for m in machines],
+        "threads": t_hi,
+    }
+    if cfg.verbose:
+        emit("topology/compiles", 0.0,
+             f"{compiles} jits for {grids} grids ({points} grid points)")
+    return [
+        table_experiment(
+            "topology_grid",
+            f"Topology grid — every lock on SMP / 2- and 4-node NUMA / "
+            f"clustered-CCX / interleaved-NUMA machines "
+            f"(T={t_hi}, degenerate local CS; one jit per lock)",
+            ["lock", "topology", "throughput", "miss_per_episode",
+             "remote_per_episode", "latency"], grid_rows),
+        sweep_experiment(
+            "topology_remote_scaling",
+            "Remote misses per episode vs NUMA node count — "
+            "queue locks stay O(1)-remote while global spinning scales "
+            "(paper §3 Maximum Remote Misses)", "nodes", node_series),
+        table_experiment(
+            "topology_placement",
+            f"Placement sensitivity — contiguous vs interleaved thread "
+            f"pinning on the 2-node NUMA machine (T={t_hi})",
+            ["lock", "placement", "throughput", "remote_per_episode"],
+            placement_rows),
+        scalars_experiment(
+            "topology_compile",
+            "Batched-grid compile accounting — SimEngine.grid shares one "
+            "XLA program across the seed x topology axes", stats),
     ]
 
 
@@ -574,6 +703,11 @@ register("locks-ext", "Extended lock zoo (beyond paper, DESIGN.md §L2)",
          "vs the paper baselines: thread sweep, phase/coherence profile "
          "with the observed bypass bound, and spin_then_park park-cost "
          "sensitivity.")(build_locks_ext)
+register("topology", "Machine-topology sweep (DESIGN.md §L1)",
+         "Every lock across SMP / NUMA / clustered-CCX machine models "
+         "via SimEngine.grid: throughput and remote-miss scaling, "
+         "placement sensitivity, and the one-jit-per-grid-shape compile "
+         "accounting.")(build_topology)
 register("fairness", "Fairness and bounded bypass (Table 2, §9)",
          "Palindromic admission cycle, long-run unfairness, §9.4 "
          "mitigation, and bypass histograms over core.admission "
@@ -600,8 +734,8 @@ register("roofline", "Roofline aggregation",
           "End-to-end reproduction of the paper's evaluation: "
           "throughput-vs-threads for every lock program, coherence "
           "traffic, fairness and bounded-bypass histograms — plus the "
-          "beyond-paper extended lock zoo (locks-ext) and serving "
-          "(docs/SERVING.md) sections.",
+          "beyond-paper extended lock zoo (locks-ext), machine-topology "
+          "(topology) and serving (docs/SERVING.md) sections.",
           tags=("paper",))
 def build_paper(cfg: BenchConfig) -> list:
     exps = []
@@ -616,6 +750,7 @@ def build_paper(cfg: BenchConfig) -> list:
     fig1a = next(e for e in exps if e["name"] == "fig1a_max_contention")
     exps += build_locks_ext(cfg, reuse_series=fig1a["series"],
                             reuse_cells=cells)
+    exps += build_topology(cfg)
     exps += build_fairness(cfg)
     exps += build_serve(cfg)
     return exps

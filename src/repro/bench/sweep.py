@@ -1,12 +1,13 @@
-"""Sweep driver: vmapped replica-ensemble grids over the lock simulator.
+"""Sweep driver: ``SimEngine`` grids over the lock simulator.
 
-The unit of work is a *cell* — one (lock program, thread count) pair.
-Thread count fixes every array shape in the machine, so a cell jit-compiles
-exactly once; within a cell the whole replica x NUMA-configuration grid is
-``jax.vmap``-ed over the single ``jax.lax.scan`` engine and runs in one XLA
-program (``run_grid``). The NUMA node count rides through the grid as a
-*traced* value — ``CostModel`` arithmetic is pure data-flow — which is what
-lets Table 1's 1-node and 2-node variants share a compile.
+The unit of work is a *cell* — one (lock, thread count, machine,
+workload) grid point. Cells run through the per-lock ``SimEngine``
+sessions (``core/sim/engine.py``): thread count and workload fix the
+compiled shape, while the seed and topology axes are stacked
+``LoweredCost`` data vmapped through **one jit per shape** — Table 1's
+1-node and 2-node variants, and the whole SMP/NUMA/CCX grid of the
+``topology`` suite, share a compile (the engine's ``compiles`` counter
+is what the CI batching assertion watches).
 
 Also here: the admission-queue bypass instrumentation (paper §2 bounded
 bypass, §9.4 mitigation) driven against ``repro.core.admission`` policies,
@@ -15,16 +16,16 @@ and the reference-interleaver fairness probes (Table 2).
 from __future__ import annotations
 
 import time
+import warnings
+from dataclasses import replace
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.bench.registry import BenchConfig, emit
 from repro.core.admission import POLICIES, max_bypass_bound
 from repro.core.locks.programs import PROGRAMS
-from repro.core.sim.api import summarize_ensemble
-from repro.core.sim.machine import CostModel, MachineState, run_machine
+from repro.core.sim.engine import SimEngine, Workload, session
+from repro.core.sim.machine import CostModel, MachineState
 
 ALL_ALGS = tuple(sorted(PROGRAMS))
 
@@ -35,40 +36,44 @@ POINT_METRICS = ("throughput", "miss_per_episode", "inval_per_episode",
 
 def run_grid(prog, n_threads: int, n_steps: int, seeds, n_nodes,
              cost: CostModel = CostModel()) -> MachineState:
-    """Run the (seed, n_nodes) grid for one cell in a single jit: vmap of
-    the scan engine over the ensemble, NUMA config as traced data."""
-    seeds = jnp.asarray(seeds, jnp.int32)
-    nodes = jnp.asarray(n_nodes, jnp.int32)
+    """Deprecated shim: elementwise (seed, n_nodes) batch in one jit.
+    Per-point cost models are now built with ``dataclasses.replace`` —
+    every ``CostModel`` field rides through — and lowered to the stacked
+    matrix batch by the engine. Use ``SimEngine.grid`` directly."""
+    warnings.warn(
+        "run_grid is deprecated; use repro.core.sim.engine.SimEngine"
+        "(...).grid(seeds=..., topologies=[...])",
+        DeprecationWarning, stacklevel=2)
+    eng = SimEngine(prog, n_threads=n_threads,
+                    workload=Workload(n_steps=n_steps))
+    lows = [replace(cost, n_nodes=int(nn)) for nn in np.asarray(n_nodes)]
+    from repro.core.sim.engine import _lower_host
+    return eng._run_batch([int(s) for s in np.asarray(seeds)],
+                          [_lower_host(c, n_threads) for c in lows],
+                          eng.workload, n_threads)
 
-    @jax.jit
-    def go(seeds, nodes):
-        def one(seed, nn):
-            cm = CostModel(hit=cost.hit, local_miss=cost.local_miss,
-                           remote_miss=cost.remote_miss, n_nodes=nn,
-                           park_cost=cost.park_cost,
-                           unpark_cost=cost.unpark_cost)
-            return run_machine(prog, n_threads, n_steps, cm, seed)
-        return jax.vmap(one)(seeds, nodes)
 
-    return go(seeds, nodes)
-
-
-def _tree_slice(s, sel):
-    return jax.tree_util.tree_map(lambda a: a[sel], s)
+def default_machine(cfg: BenchConfig, n_threads: int) -> CostModel:
+    """The historical default machine for a cell: flat, 2 NUMA nodes
+    above ``cfg.numa_above`` threads."""
+    return CostModel(n_nodes=2 if n_threads > cfg.numa_above else 1)
 
 
 def bench_cell(alg: str, n_threads: int, cfg: BenchConfig, *,
-               ncs_max: int = 0, cs_shared=True, n_nodes=None):
-    """One cell with the replica ensemble vmapped; returns BenchResult.
-    (For non-default cost models — e.g. park costs — use
-    ``core.sim.api.bench_lock``, which takes a full ``CostModel``.)"""
-    prog = PROGRAMS[alg](n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
-    if n_nodes is None:
-        n_nodes = 2 if n_threads > cfg.numa_above else 1
-    seeds = np.arange(cfg.seed0, cfg.seed0 + cfg.n_replicas)
-    s = run_grid(prog, n_threads, cfg.n_steps, seeds,
-                 np.full_like(seeds, n_nodes))
-    return summarize_ensemble(alg, n_threads, s)
+               ncs_max: int = 0, cs_shared=True, n_nodes=None,
+               topology=None):
+    """One cell through the shared per-lock session; returns BenchResult.
+    ``topology`` (a ``Topology``/``CostModel``/preset name) overrides the
+    flat ``n_nodes`` default."""
+    if topology is None:
+        topology = (default_machine(cfg, n_threads) if n_nodes is None
+                    else CostModel(n_nodes=n_nodes))
+    g = session(alg).grid(
+        seeds=range(cfg.seed0, cfg.seed0 + cfg.n_replicas),
+        topologies=[topology],
+        workloads=[Workload(ncs_max, cs_shared, cfg.n_steps)],
+        threads=[n_threads])
+    return g.cells[0].result
 
 
 def lock_sweep(algs, cfg: BenchConfig, *, ncs_max: int = 0, cs_shared=True,
@@ -109,16 +114,14 @@ def coherence_rows(algs, cfg: BenchConfig, n_threads: int = 10,
     rows = []
     for alg in algs:
         t0 = time.time()
-        prog = PROGRAMS[alg](n_threads, ncs_max=0, cs_shared=False)
-        seeds = np.arange(cfg.seed0, cfg.seed0 + cfg.n_replicas)
-        grid_seeds = np.concatenate([seeds, seeds])
-        grid_nodes = np.concatenate([np.full_like(seeds, 1),
-                                     np.full_like(seeds, 2)])
-        s = run_grid(prog, n_threads, cfg.n_steps, grid_seeds, grid_nodes)
-        r1 = summarize_ensemble(alg, n_threads,
-                                _tree_slice(s, slice(0, len(seeds))))
-        r2 = summarize_ensemble(alg, n_threads,
-                                _tree_slice(s, slice(len(seeds), None)))
+        # both NUMA variants are one stacked-topology grid: one jit/alg
+        g = session(alg).grid(
+            seeds=range(cfg.seed0, cfg.seed0 + cfg.n_replicas),
+            topologies=[CostModel(n_nodes=1), CostModel(n_nodes=2)],
+            workloads=[Workload(0, False, cfg.n_steps)],
+            threads=[n_threads])
+        r1 = g.cell(topology="flat:1").result
+        r2 = g.cell(topology="flat:2").result
         rows.append({
             "lock": alg,
             "miss_per_episode": round(r1.miss_per_episode, 2),

@@ -19,8 +19,17 @@ The lowered ``Program`` is exactly the handler-table form
 ``core/sim/machine.py`` consumes — handler at ``pc`` gets
 ``(t, regs, res, rng)`` and returns ``(regs, next_pc, op4, arrive, admit,
 rng)``, with op/result encodings per the machine.py contract table — so
-compiled specs drop into ``run_machine``/``run_ensemble`` and the
-``repro.bench`` sweep driver unchanged.
+compiled specs drop into ``run_machine`` / the ``SimEngine`` session API
+and the ``repro.bench`` sweep driver unchanged.
+
+NUMA homing lowers *thread-indexed*: a ``s.per_thread(...)`` region
+becomes ``Program.home[base + i] = i`` (thread i's sequestered line) and
+lock/global words get ``-1`` (homed with thread 0, "node 0"). Which
+physical domain that means is the machine's business — the engine's
+cost-matrix lookup ``LoweredCost.miss[t, home]`` composes the home table
+with the topology's thread→leaf *placement* (``core/sim/topology.py``),
+so one compiled program runs unchanged on every machine, including
+interleaved pinnings.
 """
 from __future__ import annotations
 

@@ -1,0 +1,15 @@
+"""Lock-performance simulator: coherence machine, topologies, session API.
+
+* ``machine``  — the vectorized MESI-lite machine (§L1 substrate)
+* ``topology`` — hierarchical machine models lowering to cost matrices
+* ``engine``   — ``SimEngine``, the one execution session API
+* ``api``      — ``bench_lock`` convenience wrapper + metric aggregation
+"""
+from repro.core.sim.api import BenchResult, bench_lock    # noqa: F401
+from repro.core.sim.engine import (                       # noqa: F401
+    GridResult, SimEngine, Workload,
+)
+from repro.core.sim.machine import CostModel              # noqa: F401
+from repro.core.sim.topology import (                     # noqa: F401
+    PRESETS, Topology, ccx, numa, smp,
+)

@@ -1,5 +1,11 @@
 """High-level entry points for the lock-performance simulator.
 
+Execution lives in the ``SimEngine`` session API (``core/sim/engine.py``,
+DESIGN.md §L1); this module keeps the stable convenience surface —
+``bench_lock`` as a thin engine wrapper, plus the metric aggregation
+(``BenchResult`` / ``summarize_ensemble`` / ``admission_bypass_bound``)
+every caller shares.
+
 ``bench_lock`` runs the MutexBench workload (paper §7.1) for one algorithm
 at a given thread count and returns the paper's metrics:
 
@@ -15,12 +21,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from functools import cached_property
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.locks.programs import PROGRAMS
-from repro.core.sim.machine import CostModel, run_machine
+from repro.core.sim.machine import CostModel
 
 
 @dataclass
@@ -109,23 +112,29 @@ def summarize_ensemble(name: str, n_threads: int, s) -> BenchResult:
 
 def bench_lock(name: str, n_threads: int, *, n_steps: int = 20_000,
                ncs_max: int = 0, cs_shared: bool = True,
-               cost: CostModel = CostModel(n_nodes=2),
+               cost=CostModel(n_nodes=2),
                n_replicas: int = 4, seed0: int = 0,
                builder=None) -> BenchResult:
-    """Bench one lock. ``builder`` overrides the ``PROGRAMS`` registry
-    lookup — pass ``functools.partial(compile_spec, my_spec)`` to bench an
-    unregistered ``LockSpec`` (see ``examples/define_a_lock.py``)."""
-    prog = (builder or PROGRAMS[name])(n_threads, ncs_max=ncs_max,
-                                       cs_shared=cs_shared)
-
-    @jax.jit
-    def go(seeds):
-        return jax.vmap(lambda s: run_machine(prog, n_threads, n_steps,
-                                              cost, s))(seeds)
-
-    s = go(jnp.arange(seed0, seed0 + n_replicas))
-    return summarize_ensemble(name, n_threads, s)
+    """Bench one lock — a thin wrapper over the ``SimEngine`` session API
+    (``core/sim/engine.py``). ``cost`` accepts a flat ``CostModel``, a
+    ``core.sim.topology.Topology``, or a preset name (``"epyc-2s"``).
+    ``builder`` overrides the ``PROGRAMS`` registry lookup — pass
+    ``functools.partial(compile_spec, my_spec)`` to bench an unregistered
+    ``LockSpec`` (see ``examples/define_a_lock.py``)."""
+    from repro.core.sim.engine import SimEngine, Workload
+    eng = SimEngine(builder if builder is not None else name, name=name,
+                    n_threads=n_threads, topology=cost,
+                    workload=Workload(ncs_max=ncs_max, cs=cs_shared,
+                                      n_steps=n_steps))
+    return eng.ensemble(range(seed0, seed0 + n_replicas))
 
 
 def sweep_threads(name: str, thread_counts, **kw):
+    """Deprecated: use ``SimEngine(...).grid(threads=[...])`` — one
+    session, one compile cache, topology/workload axes included."""
+    import warnings
+    warnings.warn(
+        "sweep_threads is deprecated; use repro.core.sim.engine."
+        "SimEngine(name, ...).grid(threads=thread_counts)",
+        DeprecationWarning, stacklevel=2)
     return [bench_lock(name, t, **kw) for t in thread_counts]

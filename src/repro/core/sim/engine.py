@@ -1,0 +1,311 @@
+"""``SimEngine``: the one execution session API over the lock simulator.
+
+Historically the simulator grew five overlapping free-function entry
+points (``run_machine``, ``run_ensemble``, ``bench_lock``, ``run_grid``,
+``bench_cell``) that each re-plumbed a flat ``CostModel`` by hand. The
+engine replaces them with a single composable session:
+
+    eng = SimEngine("reciprocating", topology=numa(2, 8),
+                    workload=Workload(ncs_max=250))
+    r   = eng.run(seed=0)                     # one BenchResult
+    r   = eng.ensemble(range(4))              # seed ensemble, one jit
+    g   = eng.grid(seeds=range(4),            # seed x topology batched
+                   topologies=[smp(16), numa(2, 8), "epyc-2s"],
+                   workloads=["max_contention", "readonly"],
+                   threads=[8, 16])
+    g.cell(topology="numa2x8", workload="readonly").result.throughput
+
+Batching contract (what the compile-count CI assertion pins): the seed
+and topology axes are *data* — every topology lowers to a stacked
+``LoweredCost`` thread x thread matrix batch and the whole batch runs
+through **one jit per (threads, workload) shape**. Thread counts change
+array shapes and workloads change the compiled program, so each pair
+gets exactly one entry in the session's explicit compile cache;
+re-running the same shape costs zero new XLA traces. ``self.compiles``
+counts real traces (incremented from inside the traced function), and
+``GridResult.compiles`` reports how many a given grid call paid.
+
+``bench_lock`` / ``sweep_threads`` (core.sim.api), ``run_ensemble``
+(core.sim.machine) and the ``repro.bench`` sweep driver are now thin
+wrappers or deprecation shims over this class. See DESIGN.md §L1 for
+the topology model and docs/RESULTS.md's topology section for what the
+grid axes buy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sim import topology as topo
+from repro.core.sim.api import BenchResult, summarize_ensemble
+from repro.core.sim.machine import (
+    CostModel, LoweredCost, Program, lower_cost, run_machine,
+)
+
+__all__ = ["Workload", "WORKLOADS", "SimEngine", "GridCell", "GridResult",
+           "cost_label", "session"]
+
+
+# --- workloads ---------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Workload:
+    """MutexBench workload knobs (paper §7.1) as one value: the random
+    NCS delay bound, the CS profile (``"rw"``/``"ro"``/``"local"`` or the
+    historical bool), and the horizon in machine micro-steps."""
+    ncs_max: int = 0
+    cs: object = True
+    n_steps: int = 20_000
+    label: str = ""
+
+    @property
+    def cs_mode(self) -> str:
+        return self.cs if isinstance(self.cs, str) else (
+            "rw" if self.cs else "local")
+
+    @property
+    def name(self) -> str:
+        return self.label or f"{self.cs_mode}/ncs{self.ncs_max}"
+
+
+#: Named workloads mirroring the paper's evaluation regimes.
+WORKLOADS: dict = {
+    "max_contention": Workload(0, "rw", label="max_contention"),
+    "random_ncs": Workload(250, "rw", label="random_ncs"),
+    "readonly": Workload(60, "ro", label="readonly"),
+    "local_cs": Workload(0, "local", label="local_cs"),
+}
+
+
+def resolve_workload(w) -> Workload:
+    if isinstance(w, Workload):
+        return w
+    try:
+        return WORKLOADS[w]
+    except (KeyError, TypeError):
+        raise KeyError(f"unknown workload {w!r}; named workloads: "
+                       f"{sorted(WORKLOADS)}") from None
+
+
+# --- cost descriptions -------------------------------------------------------
+
+def _resolve_cost(t):
+    """Topology | CostModel | LoweredCost | preset-name string."""
+    if isinstance(t, str):
+        return topo.resolve(t)
+    return t
+
+
+def cost_label(t) -> str:
+    """Stable display label for a grid's topology axis."""
+    t = _resolve_cost(t)
+    if isinstance(t, topo.Topology):
+        return t.name
+    if isinstance(t, CostModel):
+        lab = f"flat:{t.n_nodes}"
+        if (t.park_cost, t.unpark_cost) != (CostModel.park_cost,
+                                            CostModel.unpark_cost):
+            lab += f"/park{t.park_cost}+{t.unpark_cost}"
+        return lab
+    return "lowered"
+
+
+def _lower_host(t, n_threads: int) -> tuple:
+    """Lower to host ``(hit, miss, remote, park, unpark)`` arrays via the
+    one true lowering (``machine.lower_cost``), so the engine path can
+    never diverge from the ``run_machine`` path — concrete data, ready to
+    stack into a topology batch the jit never specializes on."""
+    return tuple(np.asarray(x)
+                 for x in lower_cost(_resolve_cost(t), n_threads))
+
+
+# --- grid results ------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GridCell:
+    lock: str
+    n_threads: int
+    topology: str             # cost_label of the machine
+    workload: str             # Workload.name
+    result: BenchResult
+
+
+@dataclass(frozen=True)
+class GridResult:
+    """Flat cell list (threads-major, then workload, then topology) plus
+    the number of fresh XLA traces this grid call paid — 0 when every
+    (threads, workload) shape was already in the session cache."""
+    cells: tuple
+    compiles: int
+
+    def __iter__(self):
+        return iter(self.cells)
+
+    def __len__(self):
+        return len(self.cells)
+
+    def results(self) -> list:
+        return [c.result for c in self.cells]
+
+    def cell(self, **want) -> GridCell:
+        """The unique cell matching the given field values, e.g.
+        ``g.cell(topology="numa2x8", workload="readonly")``."""
+        hits = [c for c in self.cells
+                if all(getattr(c, k) == v for k, v in want.items())]
+        if len(hits) != 1:
+            raise KeyError(f"{len(hits)} cells match {want}; have "
+                           f"{[(c.n_threads, c.topology, c.workload) for c in self.cells]}")
+        return hits[0]
+
+
+# --- the session -------------------------------------------------------------
+
+class SimEngine:
+    """One lock, many machines: a session holding the compile caches.
+
+    ``lock`` is a registry name (``PROGRAMS``), a spec-builder callable
+    with the ``(n_threads, ncs_max=..., cs_shared=...)`` signature (e.g.
+    ``functools.partial(compile_spec, my_spec)``), or an already-built
+    ``Program`` (then ``workload.ncs_max``/``cs`` are baked in and only
+    ``n_steps`` applies). ``topology`` / ``workload`` / ``n_threads``
+    set session defaults; every method takes per-call overrides.
+    """
+
+    def __init__(self, lock, *, topology=None, workload=None,
+                 n_threads: int = 8, name: str | None = None):
+        if isinstance(lock, Program):
+            self._fixed, self._builder = lock, None
+            self.name = name or lock.name
+        elif callable(lock):
+            self._fixed, self._builder = None, lock
+            self.name = name or getattr(lock, "__name__", "lock")
+        else:
+            from repro.core.locks.programs import PROGRAMS
+            self._fixed, self._builder = None, PROGRAMS[lock]
+            self.name = name or lock
+        self.topology = topology if topology is not None else CostModel()
+        self.workload = (resolve_workload(workload) if workload is not None
+                         else Workload())
+        self.n_threads = n_threads
+        self._progs: dict = {}
+        self._jits: dict = {}
+        #: fresh XLA traces this session has paid (trace-time counter)
+        self.compiles = 0
+
+    # -- compile caches ------------------------------------------------------
+    def program(self, n_threads: int | None = None,
+                workload=None) -> Program:
+        """The compiled lock program for (threads, workload), cached."""
+        T = n_threads or self.n_threads
+        wl = (resolve_workload(workload) if workload is not None
+              else self.workload)
+        if self._fixed is not None:
+            return self._fixed
+        key = (T, wl.ncs_max, wl.cs_mode)
+        prog = self._progs.get(key)
+        if prog is None:
+            prog = self._progs[key] = self._builder(
+                T, ncs_max=wl.ncs_max, cs_shared=wl.cs)
+        return prog
+
+    def _runner(self, T: int, wl: Workload, n_points: int):
+        """The jitted batched executor for one (threads, workload) shape:
+        vmap of the scan engine over ``n_points`` (seed, LoweredCost)
+        pairs. One XLA trace per cache key, counted in ``compiles``."""
+        key = (T, wl.ncs_max, wl.cs_mode, wl.n_steps, n_points)
+        fn = self._jits.get(key)
+        if fn is None:
+            prog = self.program(T, wl)
+
+            def go(seeds, hit, miss, remote, park, unpark):
+                self.compiles += 1     # runs at trace time only
+
+                def one(seed, h, m, r, p, u):
+                    return run_machine(prog, T, wl.n_steps,
+                                       LoweredCost(h, m, r, p, u), seed)
+                return jax.vmap(one)(seeds, hit, miss, remote, park,
+                                     unpark)
+            fn = self._jits[key] = jax.jit(go)
+        return fn
+
+    def _run_batch(self, seeds, lowered, wl: Workload, T: int):
+        """Elementwise batch: ``seeds[i]`` against ``lowered[i]``."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        stacked = tuple(jnp.asarray(np.stack([lo[i] for lo in lowered]))
+                        for i in range(5))
+        return self._runner(T, wl, len(lowered))(seeds, *stacked)
+
+    # -- execution -----------------------------------------------------------
+    def states(self, seeds, *, topology=None, workload=None,
+               n_threads: int | None = None):
+        """Raw replica-stacked ``MachineState`` for a seed ensemble on
+        one machine (feed to ``summarize_ensemble`` or inspect)."""
+        T = n_threads or self.n_threads
+        wl = (resolve_workload(workload) if workload is not None
+              else self.workload)
+        cm = topology if topology is not None else self.topology
+        seeds = [int(s) for s in seeds]
+        low = _lower_host(cm, T)
+        return self._run_batch(seeds, [low] * len(seeds), wl, T)
+
+    def run(self, seed: int = 0, **kw) -> BenchResult:
+        """One replica, summarized."""
+        return self.ensemble([seed], **kw)
+
+    def ensemble(self, seeds, *, topology=None, workload=None,
+                 n_threads: int | None = None) -> BenchResult:
+        """Seed ensemble on one machine, aggregated to the paper's
+        metrics (one jit per shape, shared with ``grid``)."""
+        T = n_threads or self.n_threads
+        s = self.states(seeds, topology=topology, workload=workload,
+                        n_threads=T)
+        return summarize_ensemble(self.name, T, s)
+
+    def grid(self, *, seeds=(0,), topologies=None, workloads=None,
+             threads=None) -> GridResult:
+        """Cross product of the seed x topology x workload x threads
+        axes. Seeds and topologies batch into one jit per (threads,
+        workload) shape — topologies are stacked ``LoweredCost`` data, so
+        an SMP box and a 4-node NUMA box share a compile."""
+        seeds = [int(s) for s in seeds]
+        topos = [(cost_label(c), _resolve_cost(c))
+                 for c in (topologies if topologies is not None
+                           else [self.topology])]
+        wls = [resolve_workload(w) if w is not None else self.workload
+               for w in (workloads if workloads is not None
+                         else [self.workload])]
+        ts = list(threads) if threads is not None else [self.n_threads]
+        c0, S = self.compiles, len(seeds)
+        cells = []
+        for T in ts:
+            lows = [(lab, _lower_host(c, T)) for lab, c in topos]
+            batch = [lo for _, lo in lows for _ in range(S)]
+            tiled = [s for _ in lows for s in seeds]
+            for wl in wls:
+                st = self._run_batch(tiled, batch, wl, T)
+                for p, (lab, _) in enumerate(lows):
+                    sl = jax.tree_util.tree_map(
+                        lambda a, p=p: a[p * S:(p + 1) * S], st)
+                    cells.append(GridCell(
+                        lock=self.name, n_threads=T, topology=lab,
+                        workload=wl.name,
+                        result=summarize_ensemble(self.name, T, sl)))
+        return GridResult(tuple(cells), self.compiles - c0)
+
+
+# --- process-wide sessions ---------------------------------------------------
+
+_SESSIONS: dict = {}
+
+
+def session(lock: str) -> SimEngine:
+    """Shared per-lock session (registry names only): suites, the CLI
+    and tests reuse one compile cache per lock instead of re-jitting
+    per call."""
+    eng = _SESSIONS.get(lock)
+    if eng is None:
+        eng = _SESSIONS[lock] = SimEngine(lock)
+    return eng

@@ -10,7 +10,10 @@ Model (DESIGN.md §L1):
 * ``owner[W]``    — thread holding the line Modified (-1: none).
 * ``sharers[T,W]``— Shared copies.
 * Loads:  hit (owner==t or sharer) costs 1 cycle and no bus traffic;
-          miss costs C_local / C_remote (NUMA by last-writer's node) and
+          a miss pays the distance-in-hierarchy transfer cost between
+          the requester and the line's *home* thread — a traced
+          ``LoweredCost.miss[t, home]`` lookup, lowered from either the
+          flat ``CostModel`` or a ``topology.Topology`` tree — and
           downgrades a remote Modified copy to Shared.
 * Stores/atomics: hit-in-M costs 1; otherwise a miss that *invalidates*
   all other copies (counted per victim — the paper's l2d_cache_inval).
@@ -93,6 +96,10 @@ def op(kind, addr=0, a=0, b=0):
 
 @dataclass(frozen=True)
 class CostModel:
+    """Flat two-tier cost model (one local/remote pair, contiguous
+    thread->node split). Still accepted everywhere; richer machines are
+    described by ``core.sim.topology.Topology``. Both lower to the same
+    :class:`LoweredCost` thread x thread matrix the engine consumes."""
     hit: int = 1
     local_miss: int = 40
     remote_miss: int = 100
@@ -102,6 +109,44 @@ class CostModel:
     # Neither advances the coherence bus — parking is private time.
     park_cost: int = 25
     unpark_cost: int = 75
+
+
+class LoweredCost(NamedTuple):
+    """The one cost interface ``machine_step`` consumes: a *traced*
+    thread x thread transfer-cost lookup. ``miss[t, h]`` is the cycles a
+    coherence miss pays when thread ``t`` pulls a line homed with thread
+    ``h`` (the distance-in-hierarchy lookup); ``remote[t, h]`` marks
+    NUMA-remote transfers (the ``remote_per_episode`` metric). Every
+    field is data, not shape — a grid of machines is a stacked batch of
+    these, vmapped through one XLA program (``core.sim.engine``)."""
+    hit: jnp.ndarray          # () i32
+    miss: jnp.ndarray         # (T, T) i32  requester x home-thread
+    remote: jnp.ndarray       # (T, T) bool
+    park: jnp.ndarray         # () i32
+    unpark: jnp.ndarray       # () i32
+
+
+def lower_cost(cm, n_threads: int) -> LoweredCost:
+    """Lower any cost description — a flat :class:`CostModel`, a
+    ``topology.Topology`` (via its ``.lower``), or an already-lowered
+    :class:`LoweredCost` — to the matrix form. The flat lowering uses the
+    historical contiguous-split node arithmetic, so it is bit-identical
+    to the pre-topology branch; it stays pure data-flow, so a traced
+    ``n_nodes`` still shares one compile across NUMA variants."""
+    if isinstance(cm, LoweredCost):
+        return cm
+    lower = getattr(cm, "lower", None)
+    if lower is not None:                 # Topology (duck-typed: no import
+        return lower(n_threads)           # cycle with core.sim.topology)
+    t = jnp.arange(n_threads)
+    node = _node(t, n_threads, cm.n_nodes)
+    remote = (node[:, None] != node[None, :]) & (cm.n_nodes > 1)
+    return LoweredCost(
+        hit=jnp.asarray(cm.hit, I32),
+        miss=jnp.where(remote, cm.remote_miss, cm.local_miss).astype(I32),
+        remote=remote,
+        park=jnp.asarray(cm.park_cost, I32),
+        unpark=jnp.asarray(cm.unpark_cost, I32))
 
 
 @dataclass(frozen=True)
@@ -180,10 +225,12 @@ def _node(t, T, n_nodes):
     return jnp.where(n_nodes <= 1, 0, t // jnp.maximum(T // n_nodes, 1))
 
 
-def machine_step(s: MachineState, prog: Program, cm: CostModel,
-                 n_threads: int):
-    """Execute one micro-op for the earliest-ready unblocked thread."""
+def machine_step(s: MachineState, prog: Program, cm, n_threads: int):
+    """Execute one micro-op for the earliest-ready unblocked thread.
+    ``cm`` is any cost description ``lower_cost`` accepts (flat
+    ``CostModel``, ``topology.Topology``, or a ``LoweredCost``)."""
     T = n_threads
+    lc = lower_cost(cm, T)
 
     keyed = jnp.where(s.blocked, INF, s.ready_at)
     t = jnp.argmin(keyed).astype(I32)
@@ -200,22 +247,19 @@ def machine_step(s: MachineState, prog: Program, cm: CostModel,
     spin_unsat = (((kind == SPIN_EQ) | is_park) & (mval != a)) | \
                  ((kind == SPIN_NE) & (mval == a))
 
-    # --- cache/cost ---------------------------------------------------------
+    # --- cache/cost: distance-in-hierarchy lookup ---------------------------
     hit = (s.owner[addr] == t) | s.sharers[t, addr]
-    my_node = _node(t, T, cm.n_nodes)
     home_arr = jnp.asarray(prog.home if prog.home else (-1,) * prog.n_mem,
                            I32)
-    hthread = home_arr[addr]
-    home_node = jnp.where(hthread < 0, 0, _node(jnp.maximum(hthread, 0), T,
-                                                cm.n_nodes))
-    remote = (home_node != my_node) & (cm.n_nodes > 1)
+    # home == -1 homes the word with thread 0 (lock/global words, node 0)
+    eff_home = jnp.maximum(home_arr[addr], 0)
+    remote = lc.remote[t, eff_home]
     miss = is_mem & ~hit
     cost = jnp.where(~is_mem, 0,
-                     jnp.where(hit & ~is_store, cm.hit,
+                     jnp.where(hit & ~is_store, lc.hit,
                                jnp.where(hit & is_store & (s.owner[addr] == t),
-                                         cm.hit,
-                                         jnp.where(remote, cm.remote_miss,
-                                                   cm.local_miss))))
+                                         lc.hit,
+                                         lc.miss[t, eff_home])))
     # a store to a merely-Shared line is an upgrade: count as miss-ish
     upgrade = is_store & s.sharers[t, addr] & (s.owner[addr] != t)
     miss = miss | upgrade
@@ -274,8 +318,7 @@ def machine_step(s: MachineState, prog: Program, cm: CostModel,
     # a blocking PARK_EQ additionally pays the kernel-entry park cost;
     # it is private time, so only the probe's line transfer hits the bus
     bus_finish = start + op_cost
-    finish = bus_finish + jnp.where(is_park & spin_unsat,
-                                    jnp.int32(cm.park_cost), 0)
+    finish = bus_finish + jnp.where(is_park & spin_unsat, lc.park, 0)
     # bus serializes only on misses (line transfers)
     time = jnp.where(eff & miss | (spin_unsat & ~hit), bus_finish, s.time)
     ready_at = s.ready_at.at[t].set(finish)
@@ -291,8 +334,7 @@ def machine_step(s: MachineState, prog: Program, cm: CostModel,
     woke = (do_exec & writes) & s.blocked & (s.cur_op[:, 1] == addr)
     blocked = jnp.where(woke, False, s.blocked)
     # unparking a PARK_EQ waiter pays the context-switch handoff latency
-    unpark_pay = jnp.where(s.cur_op[:, 0] == PARK_EQ,
-                           jnp.int32(cm.unpark_cost), 0)
+    unpark_pay = jnp.where(s.cur_op[:, 0] == PARK_EQ, lc.unpark, 0)
     ready_at = jnp.where(woke, jnp.maximum(ready_at, finish) + unpark_pay,
                          ready_at)
     blocked = blocked.at[t].set(spin_unsat)
@@ -334,20 +376,30 @@ def machine_step(s: MachineState, prog: Program, cm: CostModel,
 
 
 def run_machine(prog: Program, n_threads: int, n_steps: int,
-                cm: CostModel = CostModel(), seed: int = 0) -> MachineState:
+                cm=CostModel(), seed: int = 0) -> MachineState:
+    """One replica. ``cm``: flat ``CostModel``, ``topology.Topology``, or
+    ``LoweredCost`` — lowered once, outside the scan."""
     s0 = init_state(prog, n_threads, seed)
+    lc = lower_cost(cm, n_threads)
 
     def body(s, _):
-        return machine_step(s, prog, cm, n_threads), None
+        return machine_step(s, prog, lc, n_threads), None
 
     s, _ = jax.lax.scan(body, s0, None, length=n_steps)
     return s
 
 
 def run_ensemble(prog: Program, n_threads: int, n_steps: int,
-                 cm: CostModel = CostModel(), n_replicas: int = 8,
-                 seed0: int = 0):
-    """vmap over independent replicas (different tie-break/NCS seeds)."""
-    f = jax.jit(jax.vmap(lambda seed: run_machine(
-        prog, n_threads, n_steps, cm, seed)), static_argnums=())
-    return f(jnp.arange(seed0, seed0 + n_replicas))
+                 cm=CostModel(), n_replicas: int = 8, seed0: int = 0):
+    """Deprecated: forward to ``core.sim.engine.SimEngine(...).states``,
+    the one session API (same stacked-``MachineState`` return)."""
+    import warnings
+
+    from repro.core.sim.engine import SimEngine, Workload
+    warnings.warn(
+        "run_ensemble is deprecated; use repro.core.sim.engine."
+        "SimEngine(prog, topology=..., workload=...).states(seeds)",
+        DeprecationWarning, stacklevel=2)
+    eng = SimEngine(prog, topology=cm, n_threads=n_threads,
+                    workload=Workload(n_steps=n_steps))
+    return eng.states(range(seed0, seed0 + n_replicas))

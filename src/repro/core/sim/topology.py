@@ -1,0 +1,275 @@
+"""Hierarchical machine topologies: first-class cost models for the
+lock simulator.
+
+The paper's coherence arguments — O(1) handoff bus transactions, the
+"Maximum Remote Misses" family, NUMA sensitivity — are statements about
+*machine topology*, not about a single local/remote cost pair. A
+:class:`Topology` describes a machine as a balanced tree of domains
+(SMT siblings / cores / CCX clusters / sockets / the whole box), each
+level with its own line-transfer cost, and lowers to the one interface
+the machine engine consumes: a **thread x thread cost matrix**
+(:class:`~repro.core.sim.machine.LoweredCost`).
+
+Model
+-----
+* ``levels`` runs innermost -> outermost. ``Level(name, size, cost)``
+  groups ``size`` units of the previous level (level 0 groups hardware
+  threads); ``cost`` is the cycles a coherence miss pays when the
+  requesting thread and the line's home first share a domain at this
+  level (their lowest common ancestor).
+* ``Level(remote=True)`` marks a *NUMA boundary*: a miss resolving at or
+  above it is counted as a remote miss (Table 1's
+  ``remote_per_episode``).
+* ``placement`` maps thread slot -> leaf. The default is the identity
+  (contiguous packing, exactly the flat ``CostModel`` convention);
+  :meth:`Topology.interleave` round-robins threads across the outermost
+  domains instead — the classic "scatter" pinning policy.
+* Per-word homing stays thread-indexed: ``Program.home[w] == t`` homes
+  word ``w`` with thread ``t`` (the paper's sequestered wait elements),
+  and ``-1`` homes it with thread 0 (lock words, node 0). Placement is
+  applied when the matrix is built, so the same compiled program runs
+  unchanged on every topology — ``compile.py`` does not re-lower.
+
+Because the lowered form is plain arrays, a *grid of topologies* is just
+a stacked batch of ``(T, T)`` matrices: ``SimEngine.grid`` vmaps one XLA
+program over them, so an SMP box, a 4-node NUMA box and a clustered-CCX
+part share a single compile (one jit per shape, never per topology).
+
+Presets: :func:`smp`, :func:`numa`, :func:`ccx` factories plus the named
+real-machine profiles in :data:`PRESETS` (``python -m repro.bench list
+--topologies`` prints the catalogue).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+__all__ = [
+    "Level", "Topology", "smp", "numa", "ccx", "PRESETS", "resolve",
+    "catalogue",
+]
+
+
+@dataclass(frozen=True)
+class Level:
+    """One tier of the domain tree.
+
+    ``size``   — units of the previous level grouped into one domain
+                 (level 0 groups hardware threads).
+    ``cost``   — line-transfer cycles when this level is the lowest
+                 common ancestor of requester and home.
+    ``remote`` — crossing into this level is a NUMA-remote transfer.
+    """
+    name: str
+    size: int
+    cost: int
+    remote: bool = False
+
+
+@dataclass(frozen=True)
+class Topology:
+    """A machine as a balanced tree of domains (innermost -> outermost).
+
+    ``hit`` / ``park_cost`` / ``unpark_cost`` complete the cost model
+    (same semantics as the flat ``CostModel`` fields). ``placement``
+    maps thread slot -> leaf; ``()`` is the identity."""
+    name: str
+    levels: tuple = ()
+    hit: int = 1
+    park_cost: int = 25
+    unpark_cost: int = 75
+    placement: tuple = field(default=())
+
+    def __post_init__(self):
+        if not self.levels:
+            raise ValueError(f"topology {self.name!r} declares no levels")
+        for lv in self.levels:
+            if lv.size < 1:
+                raise ValueError(f"{self.name}: level {lv.name!r} has "
+                                 f"size {lv.size} < 1")
+
+    # -- structure -----------------------------------------------------------
+    @property
+    def n_leaves(self) -> int:
+        return int(np.prod([lv.size for lv in self.levels]))
+
+    def capacities(self) -> list:
+        """Leaves per domain at each level (cumulative level sizes)."""
+        caps, c = [], 1
+        for lv in self.levels:
+            c *= lv.size
+            caps.append(c)
+        return caps
+
+    def leaves(self, n_threads: int) -> np.ndarray:
+        """Thread slot -> leaf under the placement (identity default)."""
+        if n_threads > self.n_leaves:
+            raise ValueError(
+                f"topology {self.name!r} has {self.n_leaves} hardware "
+                f"threads; cannot place {n_threads}")
+        if self.placement:
+            if len(self.placement) < n_threads:
+                raise ValueError(
+                    f"{self.name}: placement covers "
+                    f"{len(self.placement)} threads < {n_threads}")
+            return np.asarray(self.placement[:n_threads], np.int64)
+        return np.arange(n_threads, dtype=np.int64)
+
+    def interleave(self) -> "Topology":
+        """Round-robin placement across the outermost domains (scatter
+        pinning): thread i lands in domain ``i % n_domains``."""
+        per = self.capacities()[-2] if len(self.levels) > 1 else 1
+        n_out = self.levels[-1].size if len(self.levels) > 1 \
+            else self.n_leaves
+        order = tuple(int((i % n_out) * per + i // n_out)
+                      for i in range(self.n_leaves))
+        return replace(self, name=f"{self.name}+interleave",
+                       placement=order)
+
+    # -- lowering ------------------------------------------------------------
+    def _lca_level(self, n_threads: int) -> np.ndarray:
+        """(T, T) index of the lowest level where each thread pair shares
+        a domain (0 = innermost)."""
+        leaf = self.leaves(n_threads)
+        lca = np.full((n_threads, n_threads), len(self.levels) - 1,
+                      np.int64)
+        for d, cap in reversed(list(enumerate(self.capacities()))):
+            dom = leaf // cap
+            lca = np.where(dom[:, None] == dom[None, :], d, lca)
+        return lca
+
+    def cost_matrix(self, n_threads: int) -> np.ndarray:
+        """(T, T) int32: miss cycles for requester row, home-thread col."""
+        costs = np.asarray([lv.cost for lv in self.levels], np.int32)
+        return costs[self._lca_level(n_threads)]
+
+    def remote_matrix(self, n_threads: int) -> np.ndarray:
+        """(T, T) bool: pairs whose transfers cross a NUMA boundary."""
+        rem = np.asarray([lv.remote for lv in self.levels], bool)
+        return rem[self._lca_level(n_threads)]
+
+    def lower(self, n_threads: int):
+        """Lower to the machine's :class:`LoweredCost` (jnp arrays)."""
+        import jax.numpy as jnp
+
+        from repro.core.sim.machine import LoweredCost
+        return LoweredCost(
+            hit=jnp.int32(self.hit),
+            miss=jnp.asarray(self.cost_matrix(n_threads), jnp.int32),
+            remote=jnp.asarray(self.remote_matrix(n_threads), bool),
+            park=jnp.int32(self.park_cost),
+            unpark=jnp.int32(self.unpark_cost))
+
+    # -- description ---------------------------------------------------------
+    def describe(self) -> dict:
+        return {
+            "name": self.name,
+            "threads": self.n_leaves,
+            "levels": [(lv.name, lv.size, lv.cost, lv.remote)
+                       for lv in self.levels],
+            "placement": "interleaved" if self.placement else "contiguous",
+        }
+
+    def summary(self) -> str:
+        tiers = " > ".join(
+            f"{lv.name}[{lv.size}]@{lv.cost}{'*' if lv.remote else ''}"
+            for lv in reversed(self.levels))
+        return f"{self.n_leaves}t  {tiers}"
+
+
+# --- factories ---------------------------------------------------------------
+
+def smp(n_threads: int, miss: int = 40, hit: int = 1) -> Topology:
+    """Degenerate single-level topology: one symmetric domain, every miss
+    local. Bit-identical to the flat ``CostModel(n_nodes=1)`` path (the
+    migration oracle in tests/test_topology.py pins this)."""
+    return Topology(f"smp{n_threads}",
+                    levels=(Level("node", n_threads, miss),), hit=hit)
+
+
+def numa(nodes: int, per_node: int = 8, local: int = 40,
+         remote: int = 100, hit: int = 1) -> Topology:
+    """Classic flat NUMA: ``nodes`` sockets, uniform remote cost. With
+    contiguous placement this matches ``CostModel(n_nodes=nodes)`` when
+    ``T == nodes * per_node``."""
+    return Topology(
+        f"numa{nodes}x{per_node}",
+        levels=(Level("node", per_node, local),
+                Level("machine", nodes, remote, remote=True)), hit=hit)
+
+
+def ccx(sockets: int = 2, ccx_per_socket: int = 2, per_ccx: int = 4,
+        ccx_cost: int = 25, socket_cost: int = 60,
+        cross_cost: int = 140, hit: int = 1) -> Topology:
+    """Clustered-CCX part (chiplet CPUs): cheap intra-CCX transfers, a
+    mid-cost hop between CCX dies on one socket, and an expensive
+    cross-socket (NUMA-remote) hop."""
+    return Topology(
+        f"ccx{sockets}x{ccx_per_socket}x{per_ccx}",
+        levels=(Level("ccx", per_ccx, ccx_cost),
+                Level("socket", ccx_per_socket, socket_cost),
+                Level("machine", sockets, cross_cost, remote=True)),
+        hit=hit)
+
+
+#: Named real-machine profiles (shapes and relative costs modelled after
+#: published latency matrices; cycle values are in the simulator's units,
+#: where a flat local miss is 40).
+PRESETS: dict = {
+    # 2-socket chiplet server: 8 CCDs/socket, 4 threads/CCX slice.
+    "epyc-2s": Topology(
+        "epyc-2s",
+        levels=(Level("ccx", 4, 25),
+                Level("socket", 8, 60),
+                Level("machine", 2, 140, remote=True))),
+    # 4-socket monolithic-mesh server: SMT pairs, one mesh per socket,
+    # UPI hops between sockets.
+    "xeon-4s": Topology(
+        "xeon-4s",
+        levels=(Level("smt", 2, 8),
+                Level("socket", 8, 45),
+                Level("machine", 4, 110, remote=True))),
+    # 2-die UMA-ish desktop part: fast core clusters, moderate die hop.
+    "m2-ultra": Topology(
+        "m2-ultra",
+        levels=(Level("cluster", 4, 20),
+                Level("die", 3, 55),
+                Level("machine", 2, 90, remote=True))),
+}
+
+
+def resolve(t) -> Topology:
+    """Accept a ``Topology``, a preset name, or ``smp:N`` / ``numa:KxP``
+    / ``ccx[:SxCxP]`` shorthand; return a ``Topology``."""
+    if isinstance(t, Topology):
+        return t
+    if not isinstance(t, str):
+        raise TypeError(f"not a topology: {t!r}")
+    if t in PRESETS:
+        return PRESETS[t]
+    kind, _, arg = t.partition(":")
+    try:
+        if kind == "smp":
+            return smp(int(arg or 8))
+        if kind == "numa":
+            k, _, p = arg.partition("x")
+            return numa(int(k or 2), int(p or 8))
+        if kind == "ccx":
+            if not arg:
+                return ccx()
+            s, c, p = arg.split("x")
+            return ccx(int(s), int(c), int(p))
+    except ValueError:
+        pass
+    raise KeyError(
+        f"unknown topology {t!r}; presets: {sorted(PRESETS)}; shorthand: "
+        "smp:N, numa:KxP, ccx[:SxCxP]")
+
+
+def catalogue() -> list:
+    """Rows for ``python -m repro.bench list --topologies``: the named
+    profiles plus one canonical instance of each factory."""
+    rows = [("smp:N", smp(8)), ("numa:KxP", numa(2, 4)), ("ccx", ccx())]
+    rows += sorted(PRESETS.items())
+    return [(name, t.summary()) for name, t in rows]

@@ -66,7 +66,8 @@ def test_registry_exposes_every_lock_program():
     assert set(FIG1_ALGS) == set(PROGRAMS)
     for suite in ("paper", "mutexbench", "coherence", "fairness",
                   "atomics", "kvstore", "residency", "scheduler",
-                  "serve", "kernels", "roofline", "locks-ext"):
+                  "serve", "kernels", "roofline", "locks-ext",
+                  "topology"):
         assert suite in names()
 
 
@@ -99,6 +100,36 @@ def test_locks_ext_suite_tiny():
     assert all("spec_steps" in r for r in by["locksext_profile"]["rows"])
     assert len(by["locksext_park"]["rows"]) >= 3
     assert "| lock |" in render_markdown(doc)
+
+
+def test_topology_suite_tiny():
+    doc = run_suite("topology", TINY)
+    assert validate_result(doc) == []
+    by = {e["name"]: e for e in doc["experiments"]}
+    rows = by["topology_grid"]["rows"]
+    assert {r["lock"] for r in rows} == set(PROGRAMS)
+    machines = {r["topology"] for r in rows}
+    assert any(m.startswith("smp") for m in machines)
+    assert any(m.startswith("numa") for m in machines)
+    assert any(m.startswith("ccx") for m in machines)
+    # SMP never produces remote misses; NUMA machines do for queue locks
+    for r in rows:
+        if r["topology"].startswith("smp"):
+            assert r["remote_per_episode"] == 0.0, r
+    # the batching contract rides in the document itself
+    stats = by["topology_compile"]["values"]
+    assert stats["compiles_per_grid"] <= 1.0
+    assert by["topology_remote_scaling"]["series"]
+    assert {r["placement"] for r in by["topology_placement"]["rows"]} \
+        == {"contiguous", "interleaved"}
+
+
+def test_cli_list_topologies(capsys):
+    assert cli_main(["list", "--topologies"]) == 0
+    out = capsys.readouterr().out
+    assert "# machine topologies" in out and "# suites" not in out
+    for name in ("epyc-2s", "xeon-4s", "m2-ultra", "smp:N", "numa:KxP"):
+        assert name in out
 
 
 def test_bypass_bounds_match_paper():

@@ -133,6 +133,30 @@ def test_admission_interleave_bounds():
     assert admission_bypass_bound(s.adm_log, s.adm_cnt) > 2
 
 
+def test_admission_bypass_bound_ring_wrap():
+    """The ``cnt >= K`` branch: once the admission ring has wrapped, the
+    chronological order is ``np.roll(log, -(cnt % K))`` — decoding the
+    raw buffer order would split interleave runs across the seam.
+
+    Ring of K=5 holding 7 admissions: chronological tail is
+    [0, 1, 1, 1, 0] (thread 1 admitted 3x between thread 0's turns), laid
+    out in the buffer as [1, 0 | 0, 1, 1] with the write cursor at 2."""
+    log = np.array([1, 0, 0, 1, 1])
+    assert admission_bypass_bound(log, np.array(7)) == 3
+    # naive (unwrapped) reading of the same buffer would say 2
+    assert admission_bypass_bound(log, np.array(4)) == 2
+    # exact-fill boundary: cnt == K wraps with zero rotation
+    full = np.array([0, 1, 1, 0, 1])
+    assert admission_bypass_bound(full, np.array(5)) == 2
+    # unfilled ring (cnt < K): only the first cnt entries are decoded,
+    # and the -1 padding is ignored
+    part = np.array([0, 1, 0, -1, -1])
+    assert admission_bypass_bound(part, np.array(3)) == 1
+    # replica-stacked logs take the worst bound across replicas
+    stacked = np.stack([log, np.array([0, 1, 0, 1, 0])])
+    assert admission_bypass_bound(stacked, np.array([7, 5])) == 3
+
+
 # --- new-variant behaviour ---------------------------------------------------
 
 def test_hapax_fifo_fair_constant_paths():

@@ -1,0 +1,266 @@
+"""Topology model + ``SimEngine`` session API tests.
+
+* **Structure** — preset trees, cost/remote matrices, placement,
+  shorthand resolution.
+* **Migration oracle** — flat-``CostModel`` results are *frozen* against
+  goldens captured from the pre-redesign machine (pinned seeds), and a
+  degenerate single-level topology is bit-identical to the flat path,
+  state field for state field (mirrors PR 3's differential-oracle
+  pattern: the redesign re-plumbs execution, never the numbers).
+* **Batching** — one XLA trace per (threads, workload) grid shape and
+  zero for repeats: the compile-count assertion CI relies on, so a
+  regression that silently recompiles per topology fails loudly.
+* **Shims** — ``run_ensemble`` / ``sweep_threads`` / ``run_grid``
+  deprecation forwards, including the ``dataclasses.replace`` semantics
+  that keep newly added ``CostModel`` fields alive through ``run_grid``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.bench.sweep import run_grid
+from repro.core.locks.programs import PROGRAMS
+from repro.core.sim.api import bench_lock
+from repro.core.sim.engine import (
+    WORKLOADS, SimEngine, Workload, cost_label,
+)
+from repro.core.sim.machine import (
+    CostModel, lower_cost, run_ensemble, run_machine,
+)
+from repro.core.sim.topology import PRESETS, ccx, numa, resolve, smp
+
+STATE_FIELDS = ("mem", "owner", "sharers", "last_writer", "pc", "regs",
+                "time", "episodes", "misses", "remote", "inval_recv",
+                "lat_sum", "adm_log", "adm_cnt")
+
+# --- structure ---------------------------------------------------------------
+
+
+def test_cost_matrix_numa():
+    t = numa(2, 4, local=40, remote=100)
+    m, r = t.cost_matrix(8), t.remote_matrix(8)
+    assert m.shape == (8, 8) and np.array_equal(m, m.T)
+    assert (m[np.arange(8), np.arange(8)] == 40).all()   # own home: local
+    assert m[0, 3] == 40 and not r[0, 3]                 # same node
+    assert m[0, 4] == 100 and r[0, 4]                    # cross node
+    assert r.sum() == 2 * 4 * 4                          # 2 off-node blocks
+
+
+def test_cost_matrix_ccx_three_tiers():
+    t = ccx(sockets=2, ccx_per_socket=2, per_ccx=4,
+            ccx_cost=25, socket_cost=60, cross_cost=140)
+    m, r = t.cost_matrix(16), t.remote_matrix(16)
+    assert m[0, 1] == 25 and not r[0, 1]      # same CCX
+    assert m[0, 5] == 60 and not r[0, 5]      # same socket, other CCX
+    assert m[0, 9] == 140 and r[0, 9]         # cross socket: NUMA-remote
+    assert sorted(set(m.flatten().tolist())) == [25, 60, 140]
+
+
+def test_placement_interleave():
+    t = numa(2, 4)
+    ti = t.interleave()
+    assert ti.name.endswith("+interleave")
+    # contiguous: threads 0,1 share node 0; interleaved: they split
+    assert not t.remote_matrix(8)[0, 1]
+    assert ti.remote_matrix(8)[0, 1]
+    # interleave is a permutation of the same machine
+    assert sorted(ti.leaves(8).tolist()) == list(range(8))
+    assert np.sort(ti.cost_matrix(8), axis=None).tolist() == \
+        np.sort(t.cost_matrix(8), axis=None).tolist()
+
+
+def test_resolve_and_presets():
+    assert resolve("epyc-2s") is PRESETS["epyc-2s"]
+    assert resolve("smp:6").n_leaves == 6
+    assert resolve("numa:4x2").n_leaves == 8
+    assert resolve("ccx:4x2x2").n_leaves == 16
+    assert resolve("ccx").name == ccx().name
+    assert resolve(smp(3)).n_leaves == 3
+    with pytest.raises(KeyError):
+        resolve("hypercube")
+    with pytest.raises(KeyError):
+        resolve("ccx:4x4")      # malformed shorthand must not be ignored
+    for t in PRESETS.values():
+        assert t.levels[-1].remote     # every preset has a NUMA boundary
+
+
+def test_oversubscription_raises():
+    with pytest.raises(ValueError):
+        smp(4).cost_matrix(8)
+    with pytest.raises(ValueError):
+        SimEngine("mcs", topology=numa(2, 2), n_threads=6).run(0)
+
+
+def test_flat_lowering_matches_equivalent_topology():
+    lc_flat = lower_cost(CostModel(n_nodes=2), 8)
+    lc_topo = lower_cost(numa(2, 4), 8)
+    assert np.array_equal(np.asarray(lc_flat.miss),
+                          np.asarray(lc_topo.miss))
+    assert np.array_equal(np.asarray(lc_flat.remote),
+                          np.asarray(lc_topo.remote))
+
+
+# --- migration oracle --------------------------------------------------------
+
+# Pre-redesign goldens: (throughput, episodes, miss/ep, latency,
+# per-replica bus time) from the seed machine's flat branch — T=6,
+# 4000 steps, seeds (0, 1), max contention, shared-rw CS.
+GOLD = {
+    ("reciprocating", 1): (4.158806755867515, 948, 6.006329113924051,
+                           1098.3544303797469, [113975, 113975]),
+    ("reciprocating", 2): (2.6847158109371017, 948, 6.006329113924051,
+                           1693.0379746835442, [176555, 176555]),
+    ("ticket", 1): (2.764547180494954, 664, 9.018072289156626,
+                    1692.6656626506024, [120092, 120092]),
+    ("ticket", 2): (1.5829725554517193, 664, 9.018072289156626,
+                    2923.027108433735, [209732, 209732]),
+    ("mcs", 1): (2.7675559644280896, 722, 9.033240997229917,
+                 1635.3434903047091, [130440, 130440]),
+    ("mcs", 2): (2.034719873745914, 722, 9.033240997229917,
+                 2220.7174515235456, [177420, 177420]),
+}
+ORACLE_WL = Workload(ncs_max=0, cs=True, n_steps=4000)
+
+
+@pytest.mark.parametrize("name,nodes", sorted(GOLD))
+def test_flat_results_frozen_to_pre_redesign(name, nodes):
+    """The engine's flat path reproduces the pre-topology machine
+    bit-for-bit (float metrics compared exactly: the underlying state is
+    integer, so the derived doubles are deterministic)."""
+    thr, eps, miss, lat, times = GOLD[(name, nodes)]
+    eng = SimEngine(name, topology=CostModel(n_nodes=nodes), n_threads=6,
+                    workload=ORACLE_WL)
+    r = eng.ensemble([0, 1])
+    assert (r.throughput, r.episodes, r.miss_per_episode, r.latency) \
+        == (thr, eps, miss, lat)
+    st = eng.states([0, 1])
+    assert [int(t) for t in np.asarray(st.time)] == times
+
+
+@pytest.mark.parametrize("name", ["reciprocating", "ticket", "mcs",
+                                  "hapax", "ttas"])
+def test_degenerate_topology_bit_identical_to_flat(name):
+    """Satellite invariant: on a single-level topology every lock's full
+    machine state — and hence its BenchResult — equals the flat
+    ``CostModel`` path exactly."""
+    eng = SimEngine(name, n_threads=6, workload=ORACLE_WL)
+    flat = eng.states([0, 1], topology=CostModel(n_nodes=1))
+    topo = eng.states([0, 1], topology=smp(6))
+    for f in STATE_FIELDS:
+        assert np.array_equal(np.asarray(getattr(flat, f)),
+                              np.asarray(getattr(topo, f))), (name, f)
+    # and the 2-node NUMA machine equals its topology-tree spelling
+    flat2 = eng.states([0, 1], topology=CostModel(n_nodes=2))
+    topo2 = eng.states([0, 1], topology=numa(2, 3))
+    for f in STATE_FIELDS:
+        assert np.array_equal(np.asarray(getattr(flat2, f)),
+                              np.asarray(getattr(topo2, f))), (name, f)
+
+
+# --- engine API --------------------------------------------------------------
+
+def test_engine_ensemble_matches_grid_cell():
+    eng = SimEngine("reciprocating", n_threads=4,
+                    workload=Workload(n_steps=2000))
+    r = eng.ensemble([0, 1], topology=numa(2, 2))
+    g = eng.grid(seeds=[0, 1], topologies=[numa(2, 2)])
+    c = g.cell(topology="numa2x2")
+    assert (c.result.throughput, c.result.episodes,
+            c.result.miss_per_episode) == \
+        (r.throughput, r.episodes, r.miss_per_episode)
+    assert c.lock == "reciprocating" and c.n_threads == 4
+
+
+def test_grid_axes_cross_product():
+    eng = SimEngine("mcs", n_threads=4, workload=Workload(n_steps=1000))
+    g = eng.grid(seeds=[0], topologies=[smp(8), "numa:2x4"],
+                 workloads=["max_contention", "readonly"],
+                 threads=[2, 4])
+    assert len(g) == 2 * 2 * 2
+    assert {c.workload for c in g} == {"max_contention", "readonly"}
+    assert {c.topology for c in g} == {"smp8", "numa2x4"}
+    assert {c.n_threads for c in g} == {2, 4}
+    with pytest.raises(KeyError):
+        g.cell(topology="smp8")        # ambiguous: 4 cells match
+
+
+def test_one_jit_per_grid_shape():
+    """The batching contract: seed x topology axes never retrace; only a
+    new (threads, workload-shape) pair does. A 2-node NUMA grid point
+    costs zero extra compiles next to SMP."""
+    eng = SimEngine("reciprocating", n_threads=6,
+                    workload=Workload(n_steps=800))
+    g = eng.grid(seeds=[0, 1],
+                 topologies=[smp(6), CostModel(n_nodes=2), numa(3, 2),
+                             ccx(2, 1, 3)])
+    assert g.compiles == 1
+    # same shape again: fully cached
+    g2 = eng.grid(seeds=[2, 3],
+                  topologies=[numa(2, 3), smp(6), "numa:3x2",
+                              CostModel(n_nodes=6)])
+    assert g2.compiles == 0
+    # a new workload re-traces once; a new thread count likewise
+    g3 = eng.grid(seeds=[0, 1], topologies=[smp(6), numa(2, 3),
+                                            numa(3, 2), ccx(2, 1, 3)],
+                  workloads=["readonly"])
+    assert g3.compiles == 1
+    assert eng.compiles == 2
+
+
+def test_workloads_and_labels():
+    assert WORKLOADS["readonly"].cs_mode == "ro"
+    assert Workload(120, False).name == "local/ncs120"
+    assert cost_label(CostModel(n_nodes=2)) == "flat:2"
+    assert "park" in cost_label(CostModel(park_cost=0, unpark_cost=0))
+    assert cost_label("epyc-2s") == "epyc-2s"
+    with pytest.raises(KeyError):
+        SimEngine("mcs", workload="turbo")
+
+
+def test_bench_lock_accepts_topology_and_preset():
+    ra = bench_lock("mcs", 6, n_steps=2000, n_replicas=2,
+                    cost=CostModel(n_nodes=2))
+    rb = bench_lock("mcs", 6, n_steps=2000, n_replicas=2,
+                    cost="numa:2x3")
+    assert (ra.throughput, ra.episodes) == (rb.throughput, rb.episodes)
+    rc = bench_lock("mcs", 6, n_steps=2000, n_replicas=2,
+                    cost=PRESETS["epyc-2s"])
+    assert rc.episodes > 0
+
+
+# --- deprecation shims -------------------------------------------------------
+
+def test_run_ensemble_shim_forwards():
+    prog = PROGRAMS["ticket"](4, ncs_max=0, cs_shared=True)
+    with pytest.deprecated_call():
+        s = run_ensemble(prog, 4, 1500, CostModel(n_nodes=1),
+                         n_replicas=2, seed0=0)
+    direct = run_machine(prog, 4, 1500, CostModel(n_nodes=1), 0)
+    assert np.array_equal(np.asarray(s.episodes)[0],
+                          np.asarray(direct.episodes))
+
+
+def test_sweep_threads_shim_forwards():
+    from repro.core.sim.api import sweep_threads
+    with pytest.deprecated_call():
+        out = sweep_threads("ticket", (2, 4), n_steps=1000, n_replicas=1,
+                            cost=CostModel(n_nodes=1))
+    assert [r.n_threads for r in out] == [2, 4]
+    assert all(r.episodes > 0 for r in out)
+
+
+def test_run_grid_shim_keeps_new_costmodel_fields():
+    """The historical bug: run_grid rebuilt the CostModel field by field,
+    silently dropping anything newly added. The shim now goes through
+    ``dataclasses.replace``, so e.g. park costs survive."""
+    prog = PROGRAMS["spin_then_park"](4, ncs_max=0, cs_shared=True)
+    base = CostModel(n_nodes=1, park_cost=50, unpark_cost=500)
+    with pytest.deprecated_call():
+        s = run_grid(prog, 4, 3000, [0, 0], [1, 1], cost=base)
+    direct = run_machine(prog, 4, 3000, base, 0)
+    assert np.array_equal(np.asarray(s.time)[0], np.asarray(direct.time))
+    # and the park costs actually made it through (non-default machine)
+    cheap = run_machine(prog, 4, 3000,
+                        dataclasses.replace(base, unpark_cost=0), 0)
+    assert int(direct.time) != int(cheap.time)
