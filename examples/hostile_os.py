@@ -1,0 +1,73 @@
+"""Hostile OS: throughput collapse and grace under oversubscription.
+
+The benchmark everyone runs — pinned threads, dedicated cores, never a
+preemption — is the one regime a production lock never sees. This tour
+drives the scheduler model (DESIGN.md §L1 "Scheduler model",
+``core/sim/sched.py``) from dedicated cores up to 4x oversubscription
+and watches who survives:
+
+* ``reciprocating`` / ``ticket`` — pure spinners: a descheduled waiter
+  (or worse, a descheduled *holder*) stalls everyone; throughput
+  collapses by an order of magnitude.
+* ``spin_then_park`` — spins briefly, then parks: parked waiters are
+  off-core (they don't burn their timeslice), so the lock degrades by
+  percent, not decades — the Fissile-style story, and the reason
+  spin-then-park exists.
+
+The whole scheduler ladder per lock is ONE ``SimEngine.grid`` call:
+schedulers lower to four scalars (``LoweredSched``) and ride the batch
+as stacked data under a single XLA program.
+
+Run: PYTHONPATH=src python examples/hostile_os.py [--threads 8]
+"""
+import argparse
+
+from repro.core.sim.engine import SimEngine, Workload
+from repro.core.sim.sched import resolve
+
+LOCKS = ("reciprocating", "ticket", "spin_then_park")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=16_000)
+    args = ap.parse_args()
+    T = args.threads
+
+    # dedicated cores -> timesliced 1x -> oversubscribed 2x -> 4x,
+    # plus the adversarial lock-holder-preemption profile.
+    ladder = ["dedicated", "fair:2500x1", "fair:2500x2", "fair:2500x4",
+              "holder-bane"]
+    print("schedulers:")
+    for s in ladder:
+        sc = resolve(s)
+        print(f"  {sc.name:14s} {sc.summary()}")
+
+    print(f"\n{'lock':15s} {'scheduler':14s} {'thr/kcyc':>9s} "
+          f"{'vs dedicated':>12s} {'preempts':>9s} {'unfair':>7s}")
+    for lock in LOCKS:
+        eng = SimEngine(lock, n_threads=T,
+                        workload=Workload(0, True, args.steps))
+        g = eng.grid(seeds=range(3), schedulers=ladder)
+        base = g.cell(scheduler="dedicated").result.throughput
+        for c in g:
+            r = c.result
+            print(f"{lock:15s} {c.scheduler:14s} {r.throughput:9.3f} "
+                  f"{r.throughput / max(base, 1e-9):11.2%} "
+                  f"{r.preempts:9d} {r.unfairness:7.2f}")
+        print(f"{'':15s} ({len(ladder)} schedulers x 3 seeds = "
+              f"{g.compiles} XLA compile)")
+
+    print("\nReading the table: the spinners hold their dedicated-core "
+          "throughput until the cores run out (oversub > 1), then "
+          "collapse — every preempted spinner blocks the queue for a "
+          "full scheduling gap. spin_then_park sheds its timeslice by "
+          "parking, so 4x oversubscription costs it percent-level "
+          "throughput and the holder-bane profile barely registers. "
+          "This is Fig. 1's ranking inverted: the 'slow' parking lock "
+          "wins everywhere a real OS is in the loop.")
+
+
+if __name__ == "__main__":
+    main()

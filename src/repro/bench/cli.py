@@ -6,8 +6,9 @@ Commands:
                                   enumerates the registered lock specs
                                   (phase anatomy, registers, memory
                                   regions), ``--topologies`` the machine
-                                  topology presets, ``--suites`` the
-                                  suites; flags combine
+                                  topology presets, ``--schedulers`` the
+                                  hostile-OS scheduler presets,
+                                  ``--suites`` the suites; flags combine
 * ``run --suite paper --out BENCH_paper.json``
                                 — run a suite, write the schema-valid JSON
                                   result, and (for the ``paper`` suite, or
@@ -62,8 +63,10 @@ def _build_config(args) -> registry.BenchConfig:
 def cmd_list(args) -> int:
     show_programs = getattr(args, "programs", False)
     show_topologies = getattr(args, "topologies", False)
+    show_schedulers = getattr(args, "schedulers", False)
     show_suites = (getattr(args, "suites", False)
-                   or not (show_programs or show_topologies))
+                   or not (show_programs or show_topologies
+                           or show_schedulers))
     if show_suites:
         print("# suites")
         for name in registry.names():
@@ -96,6 +99,14 @@ def cmd_list(args) -> int:
             print(f"{name:12s} {summary}")
         print(f"{'':12s} pass presets/shorthand to SimEngine(topology=...) "
               "or bench_lock(cost=...)")
+    if show_schedulers:
+        from repro.core.sim.sched import catalogue
+        print("# hostile-OS schedulers (core/sim/sched.py; quanta in "
+              "simulator cycles, dedicated = never preempted)")
+        for name, summary in catalogue():
+            print(f"{name:12s} {summary}")
+        print(f"{'':12s} pass presets/shorthand to "
+              "SimEngine(scheduler=...) or .grid(schedulers=[...])")
     return 0
 
 
@@ -158,6 +169,9 @@ def build_parser() -> argparse.ArgumentParser:
     ls.add_argument("--topologies", action="store_true",
                     help="enumerate the machine-topology preset "
                          "catalogue (core/sim/topology.py)")
+    ls.add_argument("--schedulers", action="store_true",
+                    help="enumerate the hostile-OS scheduler preset "
+                         "catalogue (core/sim/sched.py)")
     ls.set_defaults(fn=cmd_list)
 
     run = sub.add_parser("run", help="run a suite and write its JSON result")

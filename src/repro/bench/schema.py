@@ -52,6 +52,15 @@ SMP/NUMA/CCX/interleaved machine roster), ``topology_remote_scaling``
 ``topology_compile`` (scalars — the SimEngine.grid one-jit-per-shape
 compile accounting that CI asserts on).
 
+The ``hostile`` suite (DESIGN.md §L1 scheduler model) is all existing
+kinds too: ``hostile_grid`` (table — locks × quantum × oversubscription
+with throughput-vs-dedicated ratios, preemption and abort counts),
+``hostile_lhp`` (table — lock-holder-preemption penalty per lock),
+``hostile_abort`` (table — the timed-wait locks' abort rate up the
+hostility ladder), and ``hostile_compile`` (scalars — the scheduler-axis
+compile accounting; CI asserts ``compiles_per_grid <= 1`` here as well,
+pinning that schedulers batch as stacked data).
+
 ``validate_result`` is the single source of truth for well-formedness;
 ``save_result``/``load_result`` refuse to write or return an invalid
 document, so a BENCH_*.json on disk is schema-valid by construction.

@@ -17,6 +17,11 @@ builders end-to-end and is what regenerates ``docs/RESULTS.md``:
                remote-miss scaling vs node count, contiguous vs
                interleaved placement — all through SimEngine.grid
                (one jit per grid shape)
+  hostile      beyond-paper hostile-OS sweep (core/sim/sched.py):
+               locks × quantum × oversubscription, lock-holder-
+               preemption stress, and the abort-rate ladder for the
+               timed-wait locks — schedulers ride the grid as stacked
+               data (one jit per grid shape)
   fairness     Table 2/§9  palindromic cycle, 2x bound, §9.4 mitigation,
                            bounded-bypass histograms (core.admission)
   residency    App. C      Jensen/decay residual-residency model
@@ -327,6 +332,162 @@ def build_topology(cfg: BenchConfig) -> list:
             "topology_compile",
             "Batched-grid compile accounting — SimEngine.grid shares one "
             "XLA program across the seed x topology axes", stats),
+    ]
+
+
+# Locks whose degradation the hostile suite contrasts: pure spinners
+# (collapse under oversubscription), queue spinners (holder preemption
+# stalls the relay), the parking hybrid (graceful), and the timed-wait
+# abortable variants.
+HOSTILE_LOCKS = ("reciprocating", "ticket", "mcs", "spin_then_park",
+                 "reciprocating_abortable", "mcs_timeout")
+HOSTILE_QUANTA = (1200, 2500)
+HOSTILE_OVERSUB = (2, 4)
+# escalating hostility for the abort-rate ladder
+HOSTILE_LADDER = ("dedicated", "fair-2x", "fair-4x", "holder-bane",
+                  "lhp:800x200x4")
+
+
+def hostile_schedulers(quick: bool) -> list:
+    """The quantum × oversubscription grid as shorthand names, dedicated
+    first (the baseline column)."""
+    quanta = HOSTILE_QUANTA[-1:] if quick else HOSTILE_QUANTA
+    ovs = HOSTILE_OVERSUB[-1:] if quick else HOSTILE_OVERSUB
+    return ["dedicated"] + [f"fair:{q}x{r}" for q in quanta for r in ovs]
+
+
+def build_hostile(cfg: BenchConfig) -> list:
+    """Hostile-OS suite (DESIGN.md §L1 "Scheduler model"): who degrades
+    gracefully when the OS preempts and oversubscribes. Every lock's
+    whole scheduler grid is ONE ``SimEngine.grid`` call — schedulers are
+    stacked ``LoweredSched`` data, so the axis adds zero XLA traces
+    (``hostile_compile`` exports the accounting; CI pins
+    ``compiles_per_grid <= 1``)."""
+    algs = _algs(cfg, HOSTILE_LOCKS)
+    t_hi = min(16, max(max(cfg.threads), 4))
+    seeds = range(cfg.seed0, cfg.seed0 + cfg.n_replicas)
+    wl = Workload(0, True, cfg.n_steps, label="max_contention")
+    scheds = hostile_schedulers(cfg.quick)
+
+    grid_rows, compiles, grids, points = [], 0, 0, 0
+    base_thr: dict = {}
+    for alg in algs:
+        t0 = time.time()
+        g = session(alg).grid(seeds=seeds, schedulers=scheds,
+                              workloads=[wl], threads=[t_hi])
+        compiles += g.compiles
+        grids += 1
+        points += len(scheds) * cfg.n_replicas
+        base = g.cell(scheduler="dedicated").result
+        base_thr[alg] = base.throughput
+        for c in g.cells:
+            r = c.result
+            grid_rows.append({
+                "lock": alg, "scheduler": c.scheduler,
+                "throughput": round(r.throughput, 4),
+                "vs_dedicated": round(r.throughput
+                                      / max(base.throughput, 1e-9), 3),
+                "latency": round(r.latency, 1),
+                "unfairness": round(r.unfairness, 3),
+                "preempts": r.preempts,
+                "aborts": r.aborts,
+            })
+        if cfg.verbose:
+            worst = min(g.results(), key=lambda r: r.throughput)
+            emit(f"hostile/{alg}",
+                 (time.time() - t0) * 1e6 / max(base.episodes, 1),
+                 f"dedicated={base.throughput:.3f}/kcyc "
+                 f"worst={worst.throughput:.3f}/kcyc jits={g.compiles}")
+
+    # lock-holder-preemption stress: same quantum/oversubscription, with
+    # and without the tight lock-held slice — the LHP delta isolates how
+    # much of the collapse is the *holder* vanishing mid-CS.
+    lhp_rows = []
+    lhp_pair = ["fair:2500x2", "lhp:2500x600x2"]
+    for alg in algs:
+        g = session(alg).grid(seeds=seeds, schedulers=lhp_pair,
+                              workloads=[wl], threads=[t_hi])
+        compiles += g.compiles
+        grids += 1
+        points += len(lhp_pair) * cfg.n_replicas
+        fair, lhp = (g.cell(scheduler=s).result for s in lhp_pair)
+        lhp_rows.append({
+            "lock": alg,
+            "fair_throughput": round(fair.throughput, 4),
+            "lhp_throughput": round(lhp.throughput, 4),
+            "lhp_penalty": round(fair.throughput
+                                 / max(lhp.throughput, 1e-9), 3),
+            "lhp_preempts": lhp.preempts,
+            "lhp_latency": round(lhp.latency, 1),
+        })
+        if cfg.verbose:
+            emit(f"hostile/lhp_{alg}", 0.0,
+                 f"penalty={lhp_rows[-1]['lhp_penalty']}x "
+                 f"preempts={lhp.preempts}")
+
+    # abort-rate ladder: the timed-wait locks up the hostility scale —
+    # aborts should be ~0 on the dedicated machine and climb with
+    # preemption pressure while episodes keep flowing.
+    abort_rows = []
+    ladder = HOSTILE_LADDER[::2] if cfg.quick else HOSTILE_LADDER
+    from repro.core.locks.programs import ABORTABLE_VARIANTS
+    for alg in [a for a in algs if a in ABORTABLE_VARIANTS]:
+        g = session(alg).grid(seeds=seeds, schedulers=list(ladder),
+                              workloads=[wl], threads=[t_hi])
+        compiles += g.compiles
+        grids += 1
+        points += len(ladder) * cfg.n_replicas
+        for c in g.cells:
+            r = c.result
+            abort_rows.append({
+                "lock": alg, "scheduler": c.scheduler,
+                "episodes": r.episodes, "aborts": r.aborts,
+                "abort_rate": round(r.aborts
+                                    / max(r.episodes + r.aborts, 1), 4),
+                "throughput": round(r.throughput, 4),
+                "preempts": r.preempts,
+            })
+        if cfg.verbose:
+            emit(f"hostile/aborts_{alg}", 0.0,
+                 " ".join(f"{row['scheduler']}={row['abort_rate']:.2%}"
+                          for row in abort_rows if row["lock"] == alg))
+
+    stats = {
+        "grids": grids, "grid_points": points, "xla_compiles": compiles,
+        "compiles_per_grid": round(compiles / max(grids, 1), 3),
+        "schedulers": scheds, "threads": t_hi,
+    }
+    if cfg.verbose:
+        emit("hostile/compiles", 0.0,
+             f"{compiles} jits for {grids} grids ({points} grid points)")
+    return [
+        table_experiment(
+            "hostile_grid",
+            f"Hostile-OS grid — locks × (quantum × oversubscription) at "
+            f"T={t_hi}, maximal contention: spinners collapse under "
+            f"timeslicing, spin-then-park degrades gracefully "
+            f"(vs_dedicated = throughput relative to the pinned machine)",
+            ["lock", "scheduler", "throughput", "vs_dedicated", "latency",
+             "unfairness", "preempts", "aborts"], grid_rows),
+        table_experiment(
+            "hostile_lhp",
+            f"Lock-holder preemption — fair:2500x2 vs the same schedule "
+            f"with a 600-cycle lock-held slice (T={t_hi}); lhp_penalty = "
+            f"fair/lhp throughput ratio",
+            ["lock", "fair_throughput", "lhp_throughput", "lhp_penalty",
+             "lhp_preempts", "lhp_latency"], lhp_rows),
+        table_experiment(
+            "hostile_abort",
+            f"Abortable acquisition — timed-wait locks up the hostility "
+            f"ladder (T={t_hi}): abort rate climbs with preemption "
+            f"pressure while mutual exclusion and progress hold",
+            ["lock", "scheduler", "episodes", "aborts", "abort_rate",
+             "throughput", "preempts"], abort_rows),
+        scalars_experiment(
+            "hostile_compile",
+            "Batched-grid compile accounting — the scheduler axis is "
+            "stacked LoweredSched data under the topology-grid jit",
+            stats),
     ]
 
 
@@ -708,6 +869,12 @@ register("topology", "Machine-topology sweep (DESIGN.md §L1)",
          "via SimEngine.grid: throughput and remote-miss scaling, "
          "placement sensitivity, and the one-jit-per-grid-shape compile "
          "accounting.")(build_topology)
+register("hostile", "Hostile-OS scheduler sweep (beyond paper, "
+         "DESIGN.md §L1)",
+         "Preemption, oversubscription and lock-holder-preemption "
+         "stress via core/sim/sched.py: locks × quantum × oversub grid, "
+         "LHP penalty table, and the abort-rate ladder for the "
+         "timed-wait locks.")(build_hostile)
 register("fairness", "Fairness and bounded bypass (Table 2, §9)",
          "Palindromic admission cycle, long-run unfairness, §9.4 "
          "mitigation, and bypass histograms over core.admission "
@@ -735,7 +902,8 @@ register("roofline", "Roofline aggregation",
           "throughput-vs-threads for every lock program, coherence "
           "traffic, fairness and bounded-bypass histograms — plus the "
           "beyond-paper extended lock zoo (locks-ext), machine-topology "
-          "(topology) and serving (docs/SERVING.md) sections.",
+          "(topology), hostile-OS scheduler (hostile) and serving "
+          "(docs/SERVING.md) sections.",
           tags=("paper",))
 def build_paper(cfg: BenchConfig) -> list:
     exps = []
@@ -751,6 +919,7 @@ def build_paper(cfg: BenchConfig) -> list:
     exps += build_locks_ext(cfg, reuse_series=fig1a["series"],
                             reuse_cells=cells)
     exps += build_topology(cfg)
+    exps += build_hostile(cfg)
     exps += build_fairness(cfg)
     exps += build_serve(cfg)
     return exps

@@ -47,10 +47,11 @@ def run_grid(prog, n_threads: int, n_steps: int, seeds, n_nodes,
     eng = SimEngine(prog, n_threads=n_threads,
                     workload=Workload(n_steps=n_steps))
     lows = [replace(cost, n_nodes=int(nn)) for nn in np.asarray(n_nodes)]
-    from repro.core.sim.engine import _lower_host
+    from repro.core.sim.engine import _lower_host, _lower_sched_host
+    slo = _lower_sched_host(None, n_threads)
     return eng._run_batch([int(s) for s in np.asarray(seeds)],
                           [_lower_host(c, n_threads) for c in lows],
-                          eng.workload, n_threads)
+                          [slo] * len(lows), eng.workload, n_threads)
 
 
 def default_machine(cfg: BenchConfig, n_threads: int) -> CostModel:

@@ -77,7 +77,10 @@ NCS = "ncs"
 
 #: Phase taxonomy (paper's structure). ``doorway`` may be empty for
 #: non-FCFS locks (TTAS has no constant-time doorway — that's the point).
-PHASES = ("doorway", "waiting", "entry", "release")
+#: ``abort`` holds the steps an impatient waiter runs after a timed wait
+#: (``PARK_*_TIMEOUT``) gives up — they must restore queue integrity: an
+#: aborted waiter leaves no live cell behind (tests/test_hostile.py).
+PHASES = ("doorway", "waiting", "entry", "release", "abort")
 
 # Address/value conventions — machine.py contract table.
 CS_WORD, CS2_WORD, ELEM_BASE = 4, 5, 8
@@ -134,6 +137,19 @@ def SPIN_NE(addr, value) -> OpExpr:
 def PARK_EQ(addr, value) -> OpExpr:
     """Blocking wait with the park/unpark cost model (machine.py table)."""
     return OpExpr(M.PARK_EQ, addr, value)
+
+
+def PARK_EQ_TIMEOUT(addr, value, timeout) -> OpExpr:
+    """Abortable wait: PARK_EQ that gives up after ``timeout`` private
+    cycles. Result packs like CAS: ``watched * 2 + ok`` — ok == 0 means
+    the wait timed out and the spec's ``abort`` phase runs next."""
+    return OpExpr(M.PARK_EQ_TIMEOUT, addr, value, timeout)
+
+
+def PARK_NE_TIMEOUT(addr, value, timeout) -> OpExpr:
+    """Abortable wait for the word to *differ* from ``value`` (timed
+    SPIN_NE under the park cost model); result as PARK_EQ_TIMEOUT."""
+    return OpExpr(M.PARK_NE_TIMEOUT, addr, value, timeout)
 
 
 def DELAY(cycles) -> OpExpr:

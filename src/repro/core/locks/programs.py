@@ -18,9 +18,10 @@ from __future__ import annotations
 from functools import partial
 
 from repro.core.locks.compile import compile_spec, describe_spec
-from repro.core.locks.specs import NEW_VARIANTS, SPECS
+from repro.core.locks.specs import ABORTABLE_VARIANTS, NEW_VARIANTS, SPECS
 
-__all__ = ["PROGRAMS", "NEW_VARIANTS", "describe_program"]
+__all__ = ["PROGRAMS", "NEW_VARIANTS", "ABORTABLE_VARIANTS",
+           "describe_program"]
 
 PROGRAMS = {name: partial(compile_spec, author, name=name)
             for name, author in SPECS.items()}

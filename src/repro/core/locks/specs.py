@@ -18,14 +18,22 @@ Extended roster (the follow-up papers the DSL makes cheap to express —
 PAPERS.md): ``hapax`` (value-based FIFO admission), ``fissile`` (TS fast
 path grafted onto a queue slow path), ``spin_then_park`` (bounded spin,
 then park/unpark under the machine's park cost model).
+
+Abortable roster (the hostile-OS layer — timed waits via the DSL's
+``abort`` phase and the ``PARK_*_TIMEOUT`` ops): ``reciprocating_abortable``
+(true abort: a CAS-consumed grant *baton* over ticket-tagged cells, so an
+impatient waiter withdraws by publishing an abort marker the release walk
+reclaims) and ``mcs_timeout`` (relay abort, AQS-style: a timed-out waiter
+keeps its queue node and, once granted, forwards the handoff through the
+release chain without entering the CS).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core.locks.dsl import (
-    CAS, DELAY, FAA, LOAD, LOCKEDEMPTY, NCS, NOP, PARK_EQ, SPIN_EQ, SPIN_NE,
-    STORE, XCHG,
+    CAS, DELAY, FAA, LOAD, LOCKEDEMPTY, NCS, NOP, PARK_EQ, PARK_EQ_TIMEOUT,
+    SPIN_EQ, SPIN_NE, STORE, XCHG,
 )
 
 
@@ -553,6 +561,232 @@ def spin_then_park(s):
         return c.op(STORE(lck.translate(c.res, nxt), 0), to=NCS)
 
 
+# ---------------------------------------------------------------------------
+# Reciprocating-abortable — true abort over ticket-tagged grant batons
+# ---------------------------------------------------------------------------
+def reciprocating_abortable(s):
+    """Retrograde (reciprocating-admission) ticket lock with *true abort*.
+
+    Grants travel as a **baton**: releasing ticket g's holder XCHGs the
+    tag ``g*4+1`` into cell ``g mod T``; admission is an atomic
+    CAS-consume of a baton (tag -> 0), so at most one baton exists and
+    mutual exclusion reduces to CAS atomicity. Ticket-unique tags make
+    cell reuse ABA-safe without generation counters.
+
+    An impatient waiter (timed park exhausted) withdraws by CASing the
+    abort marker ``my*4+2`` into its cell — never over a live baton: a
+    baton found while probing is the lock itself and is consumed
+    instead (ghost batons of aborted residue-mates are reclaimed the
+    same way, which is what keeps the lock live when a marker was
+    displaced). The release walk, on finding its grant displaced an
+    abort marker, retracts the just-published baton by CAS and walks on
+    to the next ticket — unless the retract loses, which means a prober
+    already consumed the baton and the handoff is complete."""
+    PATIENCE = 1200     # private cycles per timed-park round
+    ROUNDS = 4          # park rounds before withdrawing
+    tk = s.word("ticket")
+    gr = s.word("grant")
+    top = s.word("top")
+    bs = s.word("base")
+    cells = s.array("cells", s.T, init={0: 1})   # baton for ticket 0
+    s.regs("my", "tries", "g", "hi", "tmp")
+
+    def park(c, to="round"):
+        return c.op(PARK_EQ_TIMEOUT(cells.at(c.r.my % s.T),
+                                    c.r.my * 4 + 1, PATIENCE), to=to)
+
+    @s.step("doorway")
+    def take(c):
+        return c.op(FAA(tk, 1))
+
+    @s.step("doorway")
+    def got(c):                             # res = my ticket
+        c.r.my = c.res
+        c.r.tries = ROUNDS
+        return c.op(PARK_EQ_TIMEOUT(cells.at(c.res % s.T), c.res * 4 + 1,
+                                    PATIENCE), to="round", arrive=True)
+
+    @s.step("waiting")
+    def round(c):                           # res = cell*2 + ok
+        ok = (c.res % 2) == 1
+        mine = cells.at(c.r.my % s.T)
+        return c.when(ok, c.op(CAS(mine, c.r.my * 4 + 1, 0), to="consume"),
+                      c.op(LOAD(mine), to="probe"))
+
+    @s.step("waiting")
+    def consume(c):                         # res = old*2 + ok
+        ok = (c.res % 2) == 1
+        # lost the baton to a ghost-reclaiming residue mate: wait again
+        return c.when(ok, c.enter_cs(admit=True), park(c))
+
+    @s.step("abort")
+    def probe(c):                           # res = cell value (timed out)
+        v = c.res
+        mine = cells.at(c.r.my % s.T)
+        is_baton = (v % 4) == 1             # a grant tag — mine or a ghost
+        c.r.tries = c.r.tries - 1
+        exhausted = c.r.tries <= 0
+        take_baton = c.op(CAS(mine, v, 0), to="reclaim")
+        withdraw = c.op(CAS(mine, v, c.r.my * 4 + 2), to="abort_done")
+        return c.when(is_baton, take_baton,
+                      c.when(exhausted, withdraw, park(c)))
+
+    @s.step("abort")
+    def reclaim(c):                         # res = old*2 + ok
+        ok = (c.res % 2) == 1
+        return c.when(ok, c.enter_cs(admit=True), park(c))
+
+    @s.step("abort")
+    def abort_done(c):                      # res = old*2 + ok
+        ok = (c.res % 2) == 1
+        # marker placed: episode abandoned (no admit). A failed CAS
+        # means the cell changed under us — re-examine before leaving.
+        return c.when(ok, c.op(NOP(), to=NCS), park(c))
+
+    @s.step("release")
+    def load_grant(c):
+        return c.op(LOAD(gr))
+
+    @s.step("release")
+    def load_base(c):                       # res = granted ticket
+        c.r.g = c.res - 1
+        return c.op(LOAD(bs))
+
+    @s.step("release")
+    def descend_or_flip(c):                 # res = segment base
+        desc = c.r.g > c.res
+        return c.when(desc, c.op(STORE(gr, c.r.g), to="publish"),
+                      c.op(LOAD(top), to="read_top"))
+
+    @s.step("release")
+    def publish(c):                         # baton for ticket g
+        g = c.r.g
+        return c.op(XCHG(cells.at(g % s.T), g * 4 + 1))
+
+    @s.step("release")
+    def delivered(c):                       # res = displaced cell value
+        aborted = c.res == c.r.g * 4 + 2
+        return c.when(aborted,
+                      c.op(CAS(cells.at(c.r.g % s.T), c.r.g * 4 + 1, 0),
+                           to="retract"),
+                      c.op(NOP(), to=NCS))
+
+    @s.step("release")
+    def retract(c):                         # res = old*2 + ok
+        ok = (c.res % 2) == 1
+        # retracted the ghost baton: reclaim g, walk on to the next
+        # ticket; a lost CAS means a prober consumed it — handoff done
+        return c.when(ok, c.op(LOAD(gr), to="load_base"),
+                      c.op(NOP(), to=NCS))
+
+    @s.step("release")
+    def read_top(c):                        # res = segment top
+        c.r.hi = c.res
+        return c.op(STORE(bs, c.res))
+
+    @s.step("release")
+    def read_ticket(c):
+        return c.op(LOAD(tk))
+
+    @s.step("release")
+    def stage_top(c):                       # res = current ticket
+        c.r.tmp = c.res
+        return c.op(STORE(top, c.res - 1))
+
+    @s.step("release")
+    def flip(c):
+        empty = c.r.tmp == c.r.hi + 1       # no waiters
+        c.r.g = jnp.where(empty, c.r.tmp, c.r.tmp - 1)
+        return c.when(empty, c.op(STORE(top, c.r.tmp)),
+                      c.op(STORE(gr, c.r.tmp - 1), to="publish"))
+
+    @s.step("release")
+    def reset_base(c):
+        return c.op(STORE(bs, c.r.tmp))
+
+    @s.step("release")
+    def reset_grant(c):                     # pre-grant the next ticket
+        return c.op(STORE(gr, c.r.tmp), to="publish")
+
+
+# ---------------------------------------------------------------------------
+# MCS-timeout — relay abort (AQS-style lazy cancellation)
+# ---------------------------------------------------------------------------
+def mcs_timeout(s):
+    """MCS whose waiters time out into *relay* mode: the impatient waiter
+    abandons its CS claim but keeps its queue node (unlinking a middle
+    node needs neighbour coordination — the AQS/lazy-abort compromise);
+    once the grant arrives it forwards the handoff straight through the
+    shared release chain without entering the critical section. Queue
+    integrity is preserved by construction; the cost is that an aborted
+    waiter is only *logically* gone until its grant shows up."""
+    PATIENCE = 1600     # private cycles per timed-park round
+    ROUNDS = 3          # park rounds before giving up the claim
+    tail = s.word("tail")
+    nxt = s.per_thread("next")
+    lck = s.per_thread("locked")
+    s.regs("tries")
+
+    @s.step("doorway")
+    def clear_next(c):
+        return c.op(STORE(nxt.at(c.t), 0))
+
+    @s.step("doorway")
+    def set_locked(c):
+        return c.op(STORE(lck.at(c.t), 1))
+
+    @s.step("doorway")
+    def swap_tail(c):
+        return c.op(XCHG(tail, nxt.at(c.t)))
+
+    @s.step("doorway")
+    def link(c):                            # res = predecessor (old tail)
+        uncont = c.res == 0
+        c.r.tries = ROUNDS
+        return c.when(uncont, c.enter_cs(admit=True),
+                      c.op(STORE(c.res, nxt.at(c.t))), arrive=True)
+
+    @s.step("waiting")
+    def wait_grant(c):
+        return c.op(PARK_EQ_TIMEOUT(lck.at(c.t), 0, PATIENCE))
+
+    @s.step("waiting")
+    def check_grant(c):                     # res = lck*2 + ok
+        ok = (c.res % 2) == 1
+        c.r.tries = c.r.tries - 1
+        patient = c.r.tries > 0
+        return c.when(ok, c.enter_cs(admit=True),
+                      c.when(patient,
+                             c.op(PARK_EQ_TIMEOUT(lck.at(c.t), 0, PATIENCE),
+                                  to="check_grant"),
+                             c.op(PARK_EQ(lck.at(c.t), 0), to="relay")))
+
+    @s.step("abort")
+    def relay(c):
+        # granted after giving up: skip the CS, relay the handoff
+        return c.op(LOAD(nxt.at(c.t)), to="pass_or_close")
+
+    @s.step("release")
+    def read_next(c):
+        return c.op(LOAD(nxt.at(c.t)))
+
+    @s.step("release")
+    def pass_or_close(c):                   # res = successor next-addr
+        has = c.res != 0
+        return c.when(has, c.op(STORE(lck.translate(c.res, nxt), 0), to=NCS),
+                      c.op(CAS(tail, nxt.at(c.t), 0)))
+
+    @s.step("release")
+    def cas_done(c):                        # res = CAS old*2+ok
+        ok = (c.res % 2) == 1
+        return c.when(ok, c.op(NOP(), to=NCS),
+                      c.op(SPIN_NE(nxt.at(c.t), 0)))
+
+    @s.step("release")
+    def wake_late(c):                       # res = late successor next-addr
+        return c.op(STORE(lck.translate(c.res, nxt), 0), to=NCS)
+
+
 #: The full roster: paper locks first (spec-for-spec equal to the frozen
 #: pre-DSL tables), then the extended variants the DSL made cheap.
 SPECS = {
@@ -567,7 +801,13 @@ SPECS = {
     "hapax": hapax,
     "fissile": fissile,
     "spin_then_park": spin_then_park,
+    "reciprocating_abortable": reciprocating_abortable,
+    "mcs_timeout": mcs_timeout,
 }
 
 #: Variants added on top of the paper's roster (the `locks-ext` suite).
 NEW_VARIANTS = ("hapax", "fissile", "spin_then_park")
+
+#: Abortable/timeout variants (the `hostile` suite): locks whose specs
+#: use the DSL ``abort`` phase and the timed-park ops.
+ABORTABLE_VARIANTS = ("reciprocating_abortable", "mcs_timeout")

@@ -2,6 +2,7 @@
 
 * ``machine``  — the vectorized MESI-lite machine (§L1 substrate)
 * ``topology`` — hierarchical machine models lowering to cost matrices
+* ``sched``    — hostile-OS scheduler models lowering to traced scalars
 * ``engine``   — ``SimEngine``, the one execution session API
 * ``api``      — ``bench_lock`` convenience wrapper + metric aggregation
 """
@@ -10,6 +11,7 @@ from repro.core.sim.engine import (                       # noqa: F401
     GridResult, SimEngine, Workload,
 )
 from repro.core.sim.machine import CostModel              # noqa: F401
+from repro.core.sim.sched import Scheduler                # noqa: F401
 from repro.core.sim.topology import (                     # noqa: F401
     PRESETS, Topology, ccx, numa, smp,
 )

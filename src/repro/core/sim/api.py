@@ -41,6 +41,9 @@ class BenchResult:
                                # thread yields a large finite ratio)
     admissions: np.ndarray     # (replicas, ADM_LOG) ring of admitted tids
     admission_counts: np.ndarray   # (replicas,) total admissions (ring pos)
+    aborts: int = 0            # abandoned acquisitions (NCS returns that
+                               # completed no episode; timed-wait locks)
+    preempts: int = 0          # scheduler preemptions across the ensemble
 
     @cached_property
     def bypass_bound(self) -> int:
@@ -107,6 +110,8 @@ def summarize_ensemble(name: str, n_threads: int, s) -> BenchResult:
         unfairness=float((per_thread.max(axis=1) / lo).mean()),
         admissions=np.asarray(s.adm_log),
         admission_counts=np.asarray(s.adm_cnt),
+        aborts=max(int(np.asarray(s.returns).sum()) - int(eps.sum()), 0),
+        preempts=int(np.asarray(s.preempts).sum()),
     )
 
 

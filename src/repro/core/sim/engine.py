@@ -12,18 +12,21 @@ engine replaces them with a single composable session:
     g   = eng.grid(seeds=range(4),            # seed x topology batched
                    topologies=[smp(16), numa(2, 8), "epyc-2s"],
                    workloads=["max_contention", "readonly"],
+                   schedulers=["dedicated", "fair-4x"],
                    threads=[8, 16])
     g.cell(topology="numa2x8", workload="readonly").result.throughput
 
-Batching contract (what the compile-count CI assertion pins): the seed
-and topology axes are *data* — every topology lowers to a stacked
-``LoweredCost`` thread x thread matrix batch and the whole batch runs
-through **one jit per (threads, workload) shape**. Thread counts change
-array shapes and workloads change the compiled program, so each pair
-gets exactly one entry in the session's explicit compile cache;
-re-running the same shape costs zero new XLA traces. ``self.compiles``
-counts real traces (incremented from inside the traced function), and
-``GridResult.compiles`` reports how many a given grid call paid.
+Batching contract (what the compile-count CI assertion pins): the seed,
+topology and *scheduler* axes are *data* — every topology lowers to a
+stacked ``LoweredCost`` thread x thread matrix batch, every scheduler to
+a stacked ``LoweredSched`` scalar batch (``core/sim/sched.py``), and the
+whole batch runs through **one jit per (threads, workload) shape**.
+Thread counts change array shapes and workloads change the compiled
+program, so each pair gets exactly one entry in the session's explicit
+compile cache; re-running the same shape costs zero new XLA traces.
+``self.compiles`` counts real traces (incremented from inside the traced
+function), and ``GridResult.compiles`` reports how many a given grid
+call paid.
 
 ``bench_lock`` / ``sweep_threads`` (core.sim.api), ``run_ensemble``
 (core.sim.machine) and the ``repro.bench`` sweep driver are now thin
@@ -39,14 +42,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sim import sched as schedmod
 from repro.core.sim import topology as topo
 from repro.core.sim.api import BenchResult, summarize_ensemble
 from repro.core.sim.machine import (
-    CostModel, LoweredCost, Program, lower_cost, run_machine,
+    CostModel, LoweredCost, LoweredSched, Program, lower_cost, run_machine,
 )
 
 __all__ = ["Workload", "WORKLOADS", "SimEngine", "GridCell", "GridResult",
-           "cost_label", "session"]
+           "cost_label", "sched_label", "session"]
 
 
 # --- workloads ---------------------------------------------------------------
@@ -114,12 +118,26 @@ def cost_label(t) -> str:
 
 
 def _lower_host(t, n_threads: int) -> tuple:
-    """Lower to host ``(hit, miss, remote, park, unpark)`` arrays via the
-    one true lowering (``machine.lower_cost``), so the engine path can
-    never diverge from the ``run_machine`` path — concrete data, ready to
-    stack into a topology batch the jit never specializes on."""
+    """Lower to host ``(hit, miss, remote, park, unpark, resched)``
+    arrays via the one true lowering (``machine.lower_cost``), so the
+    engine path can never diverge from the ``run_machine`` path —
+    concrete data, ready to stack into a topology batch the jit never
+    specializes on."""
     return tuple(np.asarray(x)
                  for x in lower_cost(_resolve_cost(t), n_threads))
+
+
+def sched_label(s) -> str:
+    """Stable display label for a grid's scheduler axis."""
+    return schedmod.resolve(s).name
+
+
+def _lower_sched_host(s, n_threads: int) -> tuple:
+    """Lower a scheduler description to host ``(quantum, lhp_quantum,
+    cores, jitter)`` scalars — stacked-data siblings of ``_lower_host``
+    so the scheduler axis never adds an XLA trace."""
+    return tuple(np.asarray(x)
+                 for x in schedmod.resolve(s).lower(n_threads))
 
 
 # --- grid results ------------------------------------------------------------
@@ -131,6 +149,7 @@ class GridCell:
     topology: str             # cost_label of the machine
     workload: str             # Workload.name
     result: BenchResult
+    scheduler: str = "dedicated"   # sched_label of the OS model
 
 
 @dataclass(frozen=True)
@@ -157,7 +176,7 @@ class GridResult:
                 if all(getattr(c, k) == v for k, v in want.items())]
         if len(hits) != 1:
             raise KeyError(f"{len(hits)} cells match {want}; have "
-                           f"{[(c.n_threads, c.topology, c.workload) for c in self.cells]}")
+                           f"{[(c.n_threads, c.topology, c.scheduler, c.workload) for c in self.cells]}")
         return hits[0]
 
 
@@ -170,12 +189,16 @@ class SimEngine:
     with the ``(n_threads, ncs_max=..., cs_shared=...)`` signature (e.g.
     ``functools.partial(compile_spec, my_spec)``), or an already-built
     ``Program`` (then ``workload.ncs_max``/``cs`` are baked in and only
-    ``n_steps`` applies). ``topology`` / ``workload`` / ``n_threads``
-    set session defaults; every method takes per-call overrides.
+    ``n_steps`` applies). ``topology`` / ``workload`` / ``scheduler`` /
+    ``n_threads`` set session defaults; every method takes per-call
+    overrides. ``scheduler`` accepts anything ``sched.resolve`` does
+    (``Scheduler``, preset name, ``"fair:QxR"`` shorthand, or ``None``
+    for the dedicated machine).
     """
 
     def __init__(self, lock, *, topology=None, workload=None,
-                 n_threads: int = 8, name: str | None = None):
+                 scheduler=None, n_threads: int = 8,
+                 name: str | None = None):
         if isinstance(lock, Program):
             self._fixed, self._builder = lock, None
             self.name = name or lock.name
@@ -189,6 +212,7 @@ class SimEngine:
         self.topology = topology if topology is not None else CostModel()
         self.workload = (resolve_workload(workload) if workload is not None
                          else Workload())
+        self.scheduler = schedmod.resolve(scheduler)
         self.n_threads = n_threads
         self._progs: dict = {}
         self._jits: dict = {}
@@ -213,67 +237,85 @@ class SimEngine:
 
     def _runner(self, T: int, wl: Workload, n_points: int):
         """The jitted batched executor for one (threads, workload) shape:
-        vmap of the scan engine over ``n_points`` (seed, LoweredCost)
-        pairs. One XLA trace per cache key, counted in ``compiles``."""
+        vmap of the scan engine over ``n_points`` (seed, LoweredCost,
+        LoweredSched) triples. One XLA trace per cache key, counted in
+        ``compiles`` — scheduler scalars are vmapped data, never part of
+        the key."""
         key = (T, wl.ncs_max, wl.cs_mode, wl.n_steps, n_points)
         fn = self._jits.get(key)
         if fn is None:
             prog = self.program(T, wl)
 
-            def go(seeds, hit, miss, remote, park, unpark):
+            def go(seeds, hit, miss, remote, park, unpark, resched,
+                   quantum, lhp, cores, jitter):
                 self.compiles += 1     # runs at trace time only
 
-                def one(seed, h, m, r, p, u):
+                def one(seed, h, m, r, p, u, rs, q, lq, co, ji):
                     return run_machine(prog, T, wl.n_steps,
-                                       LoweredCost(h, m, r, p, u), seed)
+                                       LoweredCost(h, m, r, p, u, rs),
+                                       seed,
+                                       LoweredSched(q, lq, co, ji))
                 return jax.vmap(one)(seeds, hit, miss, remote, park,
-                                     unpark)
+                                     unpark, resched, quantum, lhp,
+                                     cores, jitter)
             fn = self._jits[key] = jax.jit(go)
         return fn
 
-    def _run_batch(self, seeds, lowered, wl: Workload, T: int):
-        """Elementwise batch: ``seeds[i]`` against ``lowered[i]``."""
+    def _run_batch(self, seeds, lowered, scheds, wl: Workload, T: int):
+        """Elementwise batch: ``seeds[i]`` against ``lowered[i]`` under
+        ``scheds[i]`` (host-lowered scheduler scalar tuples)."""
         seeds = jnp.asarray(seeds, jnp.int32)
         stacked = tuple(jnp.asarray(np.stack([lo[i] for lo in lowered]))
-                        for i in range(5))
-        return self._runner(T, wl, len(lowered))(seeds, *stacked)
+                        for i in range(6))
+        sstack = tuple(jnp.asarray(np.stack([sc[i] for sc in scheds]))
+                       for i in range(4))
+        return self._runner(T, wl, len(lowered))(seeds, *stacked, *sstack)
 
     # -- execution -----------------------------------------------------------
     def states(self, seeds, *, topology=None, workload=None,
-               n_threads: int | None = None):
+               scheduler=None, n_threads: int | None = None):
         """Raw replica-stacked ``MachineState`` for a seed ensemble on
         one machine (feed to ``summarize_ensemble`` or inspect)."""
         T = n_threads or self.n_threads
         wl = (resolve_workload(workload) if workload is not None
               else self.workload)
         cm = topology if topology is not None else self.topology
+        sc = (schedmod.resolve(scheduler) if scheduler is not None
+              else self.scheduler)
         seeds = [int(s) for s in seeds]
         low = _lower_host(cm, T)
-        return self._run_batch(seeds, [low] * len(seeds), wl, T)
+        slo = _lower_sched_host(sc, T)
+        return self._run_batch(seeds, [low] * len(seeds),
+                               [slo] * len(seeds), wl, T)
 
     def run(self, seed: int = 0, **kw) -> BenchResult:
         """One replica, summarized."""
         return self.ensemble([seed], **kw)
 
     def ensemble(self, seeds, *, topology=None, workload=None,
-                 n_threads: int | None = None) -> BenchResult:
+                 scheduler=None, n_threads: int | None = None) -> BenchResult:
         """Seed ensemble on one machine, aggregated to the paper's
         metrics (one jit per shape, shared with ``grid``)."""
         T = n_threads or self.n_threads
         s = self.states(seeds, topology=topology, workload=workload,
-                        n_threads=T)
+                        scheduler=scheduler, n_threads=T)
         return summarize_ensemble(self.name, T, s)
 
     def grid(self, *, seeds=(0,), topologies=None, workloads=None,
-             threads=None) -> GridResult:
-        """Cross product of the seed x topology x workload x threads
-        axes. Seeds and topologies batch into one jit per (threads,
-        workload) shape — topologies are stacked ``LoweredCost`` data, so
-        an SMP box and a 4-node NUMA box share a compile."""
+             schedulers=None, threads=None) -> GridResult:
+        """Cross product of the seed x topology x scheduler x workload x
+        threads axes. Seeds, topologies and schedulers batch into one jit
+        per (threads, workload) shape — topologies are stacked
+        ``LoweredCost`` data and schedulers stacked ``LoweredSched``
+        data, so an SMP box and a 4-node NUMA box under dedicated and
+        4x-oversubscribed OS models all share a compile."""
         seeds = [int(s) for s in seeds]
         topos = [(cost_label(c), _resolve_cost(c))
                  for c in (topologies if topologies is not None
                            else [self.topology])]
+        schs = [(sched_label(s), schedmod.resolve(s))
+                for s in (schedulers if schedulers is not None
+                          else [self.scheduler])]
         wls = [resolve_workload(w) if w is not None else self.workload
                for w in (workloads if workloads is not None
                          else [self.workload])]
@@ -282,16 +324,20 @@ class SimEngine:
         cells = []
         for T in ts:
             lows = [(lab, _lower_host(c, T)) for lab, c in topos]
-            batch = [lo for _, lo in lows for _ in range(S)]
-            tiled = [s for _ in lows for s in seeds]
+            slos = [(slab, _lower_sched_host(s, T)) for slab, s in schs]
+            pairs = [(lab, lo, slab, sl)
+                     for lab, lo in lows for slab, sl in slos]
+            batch = [lo for _, lo, _, _ in pairs for _ in range(S)]
+            sbatch = [sl for _, _, _, sl in pairs for _ in range(S)]
+            tiled = [s for _ in pairs for s in seeds]
             for wl in wls:
-                st = self._run_batch(tiled, batch, wl, T)
-                for p, (lab, _) in enumerate(lows):
+                st = self._run_batch(tiled, batch, sbatch, wl, T)
+                for p, (lab, _, slab, _) in enumerate(pairs):
                     sl = jax.tree_util.tree_map(
                         lambda a, p=p: a[p * S:(p + 1) * S], st)
                     cells.append(GridCell(
                         lock=self.name, n_threads=T, topology=lab,
-                        workload=wl.name,
+                        workload=wl.name, scheduler=slab,
                         result=summarize_ensemble(self.name, T, sl)))
         return GridResult(tuple(cells), self.compiles - c0)
 

@@ -46,10 +46,33 @@ restating it):
                                  model: ``CostModel.park_cost`` is charged
                                  when the thread blocks (the kernel-entry
                                  syscall) and ``CostModel.unpark_cost``
-                                 when a writer wakes it (the handoff /
-                                 context-switch latency)
+                                 when a writer wakes it — the unpark is a
+                                 syscall *the waker executes*, so its
+                                 cycles accrue to the waker's own
+                                 timeline; the sleeper becomes runnable
+                                 at the waking store's finish time
+  PARK_EQ_TIMEOUT / PARK_NE_TIMEOUT
+           addr, a, b=timeout    abortable waiting (the lock DSL's
+                                 ``abort`` phase): PARK_EQ / PARK-NE
+                                 blocking, but the wait gives up after
+                                 ``b`` private cycles. Result packs like
+                                 CAS: ``watched * 2 + ok`` — ok == 1 when
+                                 the condition was met, 0 when the wait
+                                 timed out (the abort path runs next)
   DELAY    a=cycles              advance only the issuing thread's clock;
                                  res = mem[addr] (use addr 0)
+
+Scheduler (hostile OS) model — ``machine_step`` also consumes a
+:class:`LoweredSched` (from ``core/sim/sched.py``), pure traced data like
+``LoweredCost``: the earliest-ready selection key *is* the runnable mask.
+A thread whose on-core slice exceeds the (seeded-jittered) quantum is
+descheduled after its current op: its ``ready_at`` jumps by the
+oversubscription gap plus ``CostModel.resched_cost`` (the re-dispatch
+charge), which freezes its PC and stops its coherence traffic until
+re-dispatch; a woken parker additionally pays one re-dispatch when cores
+are oversubscribed. The degenerate scheduler (infinite quantum,
+cores >= threads) makes every term collapse to the schedulerless
+arithmetic — bit-identical states, pinned by tests/test_hostile.py.
 
 Value/address conventions shared by every program: LOCKEDEMPTY == 1 marks
 a detached-but-empty arrival word (so real element addresses must be > 1);
@@ -80,6 +103,7 @@ INF = jnp.array(2**31 - 1, jnp.int32)
 # op kinds (semantics: the contract table in the module docstring)
 NOP, LOAD, STORE, XCHG, CAS, FAA, SPIN_EQ, SPIN_NE, DELAY, PARK_EQ = \
     range(10)
+PARK_EQ_TIMEOUT, PARK_NE_TIMEOUT = 10, 11
 
 
 class Op(NamedTuple):
@@ -106,9 +130,13 @@ class CostModel:
     n_nodes: int = 1          # NUMA nodes (threads split contiguously)
     # PARK_EQ hooks (spin-then-park locks): cycles charged on the blocking
     # park itself (kernel entry) and on the wake handoff (context switch).
-    # Neither advances the coherence bus — parking is private time.
+    # Neither advances the coherence bus — parking is private time. The
+    # park is paid by the sleeper; the unpark syscall by the *waker*.
     park_cost: int = 25
     unpark_cost: int = 75
+    # Re-dispatch charge after a scheduler deschedule (or an oversubscribed
+    # wake): the context-switch-in cost. Private time, like parking.
+    resched_cost: int = 150
 
 
 class LoweredCost(NamedTuple):
@@ -124,6 +152,37 @@ class LoweredCost(NamedTuple):
     remote: jnp.ndarray       # (T, T) bool
     park: jnp.ndarray         # () i32
     unpark: jnp.ndarray       # () i32
+    resched: jnp.ndarray      # () i32
+
+
+class LoweredSched(NamedTuple):
+    """The lowered hostile-OS scheduler ``machine_step`` consumes —
+    scalar traced data (like ``LoweredCost``, a grid of schedulers is a
+    stacked batch sharing one jit; ``core/sim/sched.py`` builds these).
+    ``quantum`` is the on-core timeslice in cycles (INF: never preempt),
+    ``lhp_quantum`` the tighter slice applied while the thread holds the
+    lock (lock-holder-preemption bias; INF: same as ``quantum``),
+    ``cores`` the physical core count (cores < T: oversubscribed — a
+    preempted thread waits out the other threads' quanta on its core),
+    and ``jitter`` the seeded per-slice budget jitter span in cycles
+    (deterministic preemption points from the per-thread xorshift)."""
+    quantum: jnp.ndarray      # () i32
+    lhp_quantum: jnp.ndarray  # () i32
+    cores: jnp.ndarray        # () i32
+    jitter: jnp.ndarray      # () i32
+
+
+def lower_sched(sched, n_threads: int) -> LoweredSched:
+    """Lower any scheduler description — ``None`` (the degenerate
+    always-running OS), a ``sched.Scheduler`` (via its ``.lower``), or an
+    already-lowered :class:`LoweredSched` — to the scalar form."""
+    if sched is None:
+        return LoweredSched(quantum=INF, lhp_quantum=INF,
+                            cores=jnp.asarray(n_threads, I32),
+                            jitter=jnp.zeros((), I32))
+    if isinstance(sched, LoweredSched):
+        return sched
+    return sched.lower(n_threads)
 
 
 def lower_cost(cm, n_threads: int) -> LoweredCost:
@@ -146,7 +205,8 @@ def lower_cost(cm, n_threads: int) -> LoweredCost:
         miss=jnp.where(remote, cm.remote_miss, cm.local_miss).astype(I32),
         remote=remote,
         park=jnp.asarray(cm.park_cost, I32),
-        unpark=jnp.asarray(cm.unpark_cost, I32))
+        unpark=jnp.asarray(cm.unpark_cost, I32),
+        resched=jnp.asarray(cm.resched_cost, I32))
 
 
 @dataclass(frozen=True)
@@ -187,6 +247,16 @@ class MachineState(NamedTuple):
     lat_sum: jnp.ndarray      # (T,) i32
     adm_log: jnp.ndarray      # (K,) i32
     adm_cnt: jnp.ndarray      # () i32
+    # abortable waiting (PARK_*_TIMEOUT): per-thread wake deadline
+    # (INF: no timed wait pending)
+    timeout_at: jnp.ndarray   # (T,) i32
+    # hostile-OS scheduler state/metrics (degenerate scheduler: inert)
+    in_cs: jnp.ndarray        # (T,) bool  lock held (admit .. NCS return)
+    slice_used: jnp.ndarray   # (T,) i32   on-core cycles this timeslice
+    sched_rng: jnp.ndarray    # (T,) u32   preemption-point xorshift
+    preempts: jnp.ndarray     # (T,) i32   involuntary deschedules
+    returns: jnp.ndarray      # (T,) i32   episodes ended (NCS returns);
+                              #            returns - episodes = aborts
 
 
 ADM_LOG = 512
@@ -218,6 +288,17 @@ def init_state(prog: Program, n_threads: int, seed: int = 0) -> MachineState:
         lat_sum=jnp.zeros(T, jnp.int32),
         adm_log=jnp.full(ADM_LOG, -1, I32),
         adm_cnt=jnp.zeros((), I32),
+        timeout_at=jnp.full(T, INF, I32),
+        in_cs=jnp.zeros(T, bool),
+        slice_used=jnp.zeros(T, I32),
+        # scheduler stream: distinct from the NCS rng so the hostile layer
+        # never perturbs the workload's random delays
+        sched_rng=((jnp.arange(T, dtype=jnp.uint32) + jnp.uint32(7))
+                   * jnp.uint32(2246822519)
+                   ^ (jnp.uint32(seed) * jnp.uint32(40503)
+                      + jnp.uint32(11))),
+        preempts=jnp.zeros(T, I32),
+        returns=jnp.zeros(T, I32),
     )
 
 
@@ -225,27 +306,43 @@ def _node(t, T, n_nodes):
     return jnp.where(n_nodes <= 1, 0, t // jnp.maximum(T // n_nodes, 1))
 
 
-def machine_step(s: MachineState, prog: Program, cm, n_threads: int):
+def machine_step(s: MachineState, prog: Program, cm, n_threads: int,
+                 sched=None):
     """Execute one micro-op for the earliest-ready unblocked thread.
     ``cm`` is any cost description ``lower_cost`` accepts (flat
-    ``CostModel``, ``topology.Topology``, or a ``LoweredCost``)."""
+    ``CostModel``, ``topology.Topology``, or a ``LoweredCost``);
+    ``sched`` any scheduler description ``lower_sched`` accepts (``None``
+    — the degenerate always-running OS — a ``sched.Scheduler``, or a
+    ``LoweredSched``)."""
     T = n_threads
     lc = lower_cost(cm, T)
+    ls = lower_sched(sched, T)
 
-    keyed = jnp.where(s.blocked, INF, s.ready_at)
+    # Runnable mask / dispatch key: a blocked thread is dispatchable only
+    # at its abort deadline (INF for plain SPIN/PARK waits); a descheduled
+    # thread's preemption gap is folded into ready_at, so "not runnable"
+    # is simply "keyed in the future" — PC frozen, no coherence traffic.
+    keyed = jnp.where(s.blocked, s.timeout_at, s.ready_at)
     t = jnp.argmin(keyed).astype(I32)
     kind, addr, a, b = (s.cur_op[t, 0], s.cur_op[t, 1], s.cur_op[t, 2],
                         s.cur_op[t, 3])
     mval = s.mem[addr]
+    start = jnp.maximum(s.time, keyed[t])
 
-    is_park = kind == PARK_EQ
+    is_park_to = (kind == PARK_EQ_TIMEOUT) | (kind == PARK_NE_TIMEOUT)
+    is_park = (kind == PARK_EQ) | is_park_to
     is_load = (kind == LOAD) | (kind == SPIN_EQ) | (kind == SPIN_NE) | is_park
     is_store = (kind == STORE) | (kind == XCHG) | (kind == CAS) | (kind == FAA)
     is_mem = is_load | is_store
 
-    # --- spin semantics: unsatisfied -> block (woken by a write) -----------
-    spin_unsat = (((kind == SPIN_EQ) | is_park) & (mval != a)) | \
-                 ((kind == SPIN_NE) & (mval == a))
+    # --- spin semantics: unsatisfied -> block (woken by a write); a timed
+    # wait whose deadline has passed completes instead, with ok == 0 ------
+    eq_wait = (kind == SPIN_EQ) | (kind == PARK_EQ) | \
+              (kind == PARK_EQ_TIMEOUT)
+    ne_wait = (kind == SPIN_NE) | (kind == PARK_NE_TIMEOUT)
+    unsat = (eq_wait & (mval != a)) | (ne_wait & (mval == a))
+    timed_out = is_park_to & unsat & (s.timeout_at[t] <= start)
+    spin_unsat = unsat & ~timed_out
 
     # --- cache/cost: distance-in-hierarchy lookup ---------------------------
     hit = (s.owner[addr] == t) | s.sharers[t, addr]
@@ -311,11 +408,10 @@ def machine_step(s: MachineState, prog: Program, cm, n_threads: int):
         jnp.where(do_exec & writes, t, s.last_writer[addr]))
 
     # --- timing -------------------------------------------------------------
-    start = jnp.maximum(s.time, s.ready_at[t])
     # spin first-check also pays its read cost before blocking
     op_cost = jnp.where(kind == DELAY, a.astype(jnp.int32),
                         cost.astype(jnp.int32))
-    # a blocking PARK_EQ additionally pays the kernel-entry park cost;
+    # a blocking PARK additionally pays the kernel-entry park cost;
     # it is private time, so only the probe's line transfer hits the bus
     bus_finish = start + op_cost
     finish = bus_finish + jnp.where(is_park & spin_unsat, lc.park, 0)
@@ -330,12 +426,35 @@ def machine_step(s: MachineState, prog: Program, cm, n_threads: int):
     sharers = sharers.at[t, addr].set(
         jnp.where(spin_unsat, True, sharers[t, addr]))
 
+    # abortable waiting: arm the deadline on the *first* block of a timed
+    # park (spurious wakes keep the original deadline); any completion —
+    # satisfied or timed out — disarms it
+    timeout_at = s.timeout_at.at[t].set(
+        jnp.where(do_exec, INF,
+                  jnp.where(spin_unsat & is_park_to
+                            & (s.timeout_at[t] == INF),
+                            finish + b, s.timeout_at[t])))
+
     # --- wake threads blocked on this word ----------------------------------
     woke = (do_exec & writes) & s.blocked & (s.cur_op[:, 1] == addr)
+    parked = ((s.cur_op[:, 0] == PARK_EQ)
+              | (s.cur_op[:, 0] == PARK_EQ_TIMEOUT)
+              | (s.cur_op[:, 0] == PARK_NE_TIMEOUT))
     blocked = jnp.where(woke, False, s.blocked)
-    # unparking a PARK_EQ waiter pays the context-switch handoff latency
-    unpark_pay = jnp.where(s.cur_op[:, 0] == PARK_EQ, lc.unpark, 0)
-    ready_at = jnp.where(woke, jnp.maximum(ready_at, finish) + unpark_pay,
+    # the unpark is a syscall the *waker* executes: its cycles accrue to
+    # t's own timeline (one fee per parked sleeper this store wakes)
+    ready_at = ready_at.at[t].add(lc.unpark * (woke & parked).sum())
+    # the sleeper becomes runnable at the waking store's finish; on an
+    # oversubscribed machine a woken parker also waits out one re-dispatch
+    redisp = jnp.where((ls.cores < T) & parked, lc.resched, 0)
+    # a spin-waiter busy-waits *on-core*: its blocked wall-time counts
+    # against its slice budget (a parked waiter sleeps off-core), so the
+    # scheduler eventually deschedules long spinners — charged as a
+    # deferred gap at the spinner's next dispatch
+    spin_span = jnp.maximum(finish - s.ready_at, 0)
+    slice_used = jnp.where(woke & ~parked, s.slice_used + spin_span,
+                           s.slice_used)
+    ready_at = jnp.where(woke, jnp.maximum(ready_at, finish) + redisp,
                          ready_at)
     blocked = blocked.at[t].set(spin_unsat)
 
@@ -347,9 +466,12 @@ def machine_step(s: MachineState, prog: Program, cm, n_threads: int):
             rng_v)
         return outs   # (regs, next_pc, op4, arrive, admit, rng)
 
+    # timed parks pack like CAS: watched * 2 + ok (ok == 0: wait aborted)
+    res_in = jnp.where(kind == CAS, mval * 2 + cas_flag,
+                       jnp.where(is_park_to,
+                                 mval * 2 + jnp.where(timed_out, 0, 1), res))
     regs_t, next_pc, next_op, arrive, admit, rng_t = run_handler(
-        (s.pc[t], s.regs[t], jnp.where(kind == CAS,
-                                       mval * 2 + cas_flag, res), s.rng[t]))
+        (s.pc[t], s.regs[t], res_in, s.rng[t]))
 
     adv = do_exec
     pc = s.pc.at[t].set(jnp.where(adv, next_pc, s.pc[t]))
@@ -369,21 +491,65 @@ def machine_step(s: MachineState, prog: Program, cm, n_threads: int):
         jnp.where(admit, t, s.adm_log[s.adm_cnt % ADM_LOG]))
     adm_cnt = s.adm_cnt + jnp.where(admit, 1, 0)
 
+    # every return to the NCS top (admitted or abort path) — so
+    # returns - episodes counts aborted acquisitions
+    ret = adv & (next_pc == 0) & (s.pc[t] != 0)
+    returns = s.returns.at[t].add(jnp.where(ret, 1, 0))
+    # lock-held window: admission .. NCS return (CS plus release path),
+    # the span the lhp_quantum bias tightens
+    holding = jnp.where(admit, True, jnp.where(ret, False, s.in_cs[t]))
+    in_cs = s.in_cs.at[t].set(holding)
+
+    # --- hostile-OS scheduler: deschedule after the op if over budget -------
+    # on-core cycles this dispatch (incl. private park/delay time)
+    burn = finish - start
+    slice_new = slice_used[t] + burn
+    q_eff = jnp.minimum(jnp.where(holding, ls.lhp_quantum, ls.quantum),
+                        ls.quantum)
+    jit_off = jnp.where(
+        ls.jitter > 0,
+        (s.sched_rng[t] % (jnp.maximum(ls.jitter, 1).astype(jnp.uint32)
+                           + jnp.uint32(1))).astype(I32), 0)
+    budget = q_eff - jit_off
+    preempt = adv & (slice_new >= budget)
+    # a preempted thread waits out the other runnables' *base* quanta on
+    # its core (their slices are not lhp-tightened), then pays the
+    # re-dispatch; the gap collapses to 0 on a dedicated machine
+    # (cores == T), and preempt never fires there (budget == INF)
+    gap = ((ls.quantum - jit_off) * (jnp.asarray(T, I32) - ls.cores)
+           // jnp.maximum(ls.cores, 1))
+    ready_at = ready_at.at[t].add(
+        jnp.where(preempt, gap + lc.resched, 0))
+    # the slice empties on a deschedule or an off-core park; a spin-block
+    # keeps accruing (the busy-wait never yields the core voluntarily)
+    slice_used = slice_used.at[t].set(
+        jnp.where(preempt | (spin_unsat & is_park), 0, slice_new))
+    sr = s.sched_rng[t]
+    sr = sr ^ (sr << jnp.uint32(13))
+    sr = sr ^ (sr >> jnp.uint32(17))
+    sr = sr ^ (sr << jnp.uint32(5))
+    sched_rng = s.sched_rng.at[t].set(
+        jnp.where(preempt, sr, s.sched_rng[t]))
+    preempts = s.preempts.at[t].add(jnp.where(preempt, 1, 0))
+
     return MachineState(mem, owner, sharers, last_writer, pc, regs, cur_op,
                         blocked, ready_at, time, rng, episodes, misses_ct,
                         remote_ct, inval_recv, arrive_time, lat_sum,
-                        adm_log, adm_cnt)
+                        adm_log, adm_cnt, timeout_at, in_cs, slice_used,
+                        sched_rng, preempts, returns)
 
 
 def run_machine(prog: Program, n_threads: int, n_steps: int,
-                cm=CostModel(), seed: int = 0) -> MachineState:
+                cm=CostModel(), seed: int = 0, sched=None) -> MachineState:
     """One replica. ``cm``: flat ``CostModel``, ``topology.Topology``, or
-    ``LoweredCost`` — lowered once, outside the scan."""
+    ``LoweredCost``; ``sched``: ``None``, ``sched.Scheduler``, or
+    ``LoweredSched`` — both lowered once, outside the scan."""
     s0 = init_state(prog, n_threads, seed)
     lc = lower_cost(cm, n_threads)
+    ls = lower_sched(sched, n_threads)
 
     def body(s, _):
-        return machine_step(s, prog, lc, n_threads), None
+        return machine_step(s, prog, lc, n_threads, ls), None
 
     s, _ = jax.lax.scan(body, s0, None, length=n_steps)
     return s

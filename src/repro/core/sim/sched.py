@@ -1,0 +1,172 @@
+"""Hostile-OS scheduler models: preemption and oversubscription as
+first-class, traced simulation inputs.
+
+The paper's constant-time doorway and bounded-bypass guarantees are most
+interesting exactly when the OS is adversarial — the admitted thread can
+be descheduled mid-critical-section (lock-holder preemption), and waiters
+can outnumber cores (oversubscription, the regime Fissile-style
+spin-then-park exists for). A :class:`Scheduler` describes that OS and
+lowers to the one interface the machine stepper consumes: four scalar
+traced values (:class:`~repro.core.sim.machine.LoweredSched`).
+
+Model
+-----
+* ``quantum``     — cycles a thread may burn on-core before the timer
+                    tick deschedules it (``None``: run-to-completion,
+                    never preempt).
+* ``oversub``     — threads-per-core ratio; ``cores = max(1,
+                    ceil(T / oversub))`` at lower time, so one Scheduler
+                    value is meaningful across a whole thread-count
+                    sweep. A preempted thread waits out the other
+                    runnables' quanta on its core before re-dispatch.
+* ``lhp_quantum`` — optional tighter slice applied *while the thread
+                    holds the lock* (admission through NCS return): the
+                    lock-holder-preemption bias that makes the holder
+                    vanish mid-CS with high probability.
+* ``jitter``      — seeded per-slice budget jitter span in cycles; the
+                    per-thread xorshift stream makes preemption points
+                    deterministic per seed but uncorrelated across
+                    threads (random preemption schedules for the
+                    property harness).
+
+Like ``LoweredCost``, the lowered form is pure data, not shape: a grid
+of schedulers is a stacked batch of four scalars vmapped through one XLA
+program — ``SimEngine.grid(schedulers=[...])`` adds the axis without a
+single extra jit trace (CI pins ``compiles_per_grid <= 1``).
+
+The degenerate scheduler (``dedicated``: no quantum, oversub 1) lowers
+to (INF, INF, T, 0), which collapses every scheduler term in the stepper
+to the schedulerless arithmetic — bit-identical ``MachineState``s, the
+differential invariant tests/test_hostile.py pins for every lock.
+
+Presets in :data:`PRESETS` (``python -m repro.bench list --schedulers``
+prints the catalogue); :func:`resolve` also accepts ``fair:QxR`` /
+``lhp:QxLxR`` shorthand.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+__all__ = ["Scheduler", "PRESETS", "resolve", "catalogue"]
+
+
+@dataclass(frozen=True)
+class Scheduler:
+    """An OS scheduler as four numbers (see module docstring).
+
+    ``quantum`` / ``lhp_quantum`` are cycles (``None``: never fires);
+    ``oversub`` is the threads:cores ratio (1.0 = dedicated cores);
+    ``jitter`` widens each slice budget by a seeded 0..jitter draw."""
+    name: str
+    quantum: int | None = None
+    oversub: float = 1.0
+    lhp_quantum: int | None = None
+    jitter: int = 0
+
+    def __post_init__(self):
+        if self.quantum is not None and self.quantum < 1:
+            raise ValueError(f"{self.name}: quantum {self.quantum} < 1")
+        if self.lhp_quantum is not None and self.lhp_quantum < 1:
+            raise ValueError(
+                f"{self.name}: lhp_quantum {self.lhp_quantum} < 1")
+        if self.oversub < 1.0:
+            raise ValueError(f"{self.name}: oversub {self.oversub} < 1")
+        if self.jitter < 0:
+            raise ValueError(f"{self.name}: jitter {self.jitter} < 0")
+        if self.lhp_quantum is not None and self.quantum is None:
+            raise ValueError(
+                f"{self.name}: lhp_quantum without a base quantum")
+
+    def cores(self, n_threads: int) -> int:
+        """Physical cores backing ``n_threads`` software threads."""
+        return max(1, math.ceil(n_threads / self.oversub))
+
+    # -- lowering ------------------------------------------------------------
+    def lower(self, n_threads: int):
+        """Lower to the machine's :class:`LoweredSched` (scalar jnp
+        data — stackable across a grid axis under one jit)."""
+        import jax.numpy as jnp
+
+        from repro.core.sim.machine import INF, LoweredSched
+        q = INF if self.quantum is None else jnp.int32(self.quantum)
+        lq = q if self.lhp_quantum is None else jnp.int32(self.lhp_quantum)
+        return LoweredSched(
+            quantum=jnp.asarray(q, jnp.int32),
+            lhp_quantum=jnp.asarray(lq, jnp.int32),
+            cores=jnp.int32(self.cores(n_threads)),
+            jitter=jnp.int32(self.jitter))
+
+    # -- description ---------------------------------------------------------
+    def describe(self) -> dict:
+        return {
+            "name": self.name,
+            "quantum": self.quantum,
+            "oversub": self.oversub,
+            "lhp_quantum": self.lhp_quantum,
+            "jitter": self.jitter,
+        }
+
+    def summary(self) -> str:
+        q = "run-to-completion" if self.quantum is None \
+            else f"q={self.quantum}"
+        bits = [q, f"oversub={self.oversub:g}x"]
+        if self.lhp_quantum is not None:
+            bits.append(f"lhp_q={self.lhp_quantum}")
+        if self.jitter:
+            bits.append(f"jitter={self.jitter}")
+        return "  ".join(bits)
+
+
+#: Named scheduler profiles. Quanta are sized against the simulator's
+#: cost units (hit 1, local miss 40, remote miss ~100, one contended
+#: episode a few hundred cycles): q=2500 deschedules every handful of
+#: episodes; the holder-bane lhp slice of 600 reliably fires *inside*
+#: the lock-held window.
+PRESETS: dict = {
+    # The classic benchmarking setup: pinned, dedicated, never preempted.
+    "dedicated": Scheduler("dedicated"),
+    # Timeslicing CFS-style fair scheduler at 2x / 4x oversubscription.
+    "fair-2x": Scheduler("fair-2x", quantum=2500, oversub=2.0, jitter=500),
+    "fair-4x": Scheduler("fair-4x", quantum=2500, oversub=4.0, jitter=500),
+    # Adversarial lock-holder preemption: a tight slice while holding.
+    "holder-bane": Scheduler("holder-bane", quantum=2500, oversub=2.0,
+                             lhp_quantum=600, jitter=500),
+}
+
+
+def resolve(s) -> Scheduler:
+    """Accept a ``Scheduler``, ``None`` (dedicated), a preset name, or
+    ``fair:QxR`` / ``lhp:QxLxR`` shorthand; return a ``Scheduler``."""
+    if s is None:
+        return PRESETS["dedicated"]
+    if isinstance(s, Scheduler):
+        return s
+    if not isinstance(s, str):
+        raise TypeError(f"not a scheduler: {s!r}")
+    if s in PRESETS:
+        return PRESETS[s]
+    kind, _, arg = s.partition(":")
+    try:
+        if kind == "fair":
+            q, _, r = arg.partition("x")
+            return Scheduler(s, quantum=int(q or 2500),
+                             oversub=float(r or 2.0))
+        if kind == "lhp":
+            q, lq, r = arg.split("x")
+            return Scheduler(s, quantum=int(q), lhp_quantum=int(lq),
+                             oversub=float(r))
+    except ValueError:
+        pass
+    raise KeyError(
+        f"unknown scheduler {s!r}; presets: {sorted(PRESETS)}; "
+        "shorthand: fair:QxR, lhp:QxLxR")
+
+
+def catalogue() -> list:
+    """Rows for ``python -m repro.bench list --schedulers``: the named
+    profiles plus the shorthand forms."""
+    rows = sorted(PRESETS.items())
+    rows += [("fair:QxR", resolve("fair:2500x2")),
+             ("lhp:QxLxR", resolve("lhp:2500x600x2"))]
+    return [(name, sc.summary()) for name, sc in rows]

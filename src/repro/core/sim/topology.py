@@ -71,14 +71,16 @@ class Level:
 class Topology:
     """A machine as a balanced tree of domains (innermost -> outermost).
 
-    ``hit`` / ``park_cost`` / ``unpark_cost`` complete the cost model
-    (same semantics as the flat ``CostModel`` fields). ``placement``
-    maps thread slot -> leaf; ``()`` is the identity."""
+    ``hit`` / ``park_cost`` / ``unpark_cost`` / ``resched_cost``
+    complete the cost model (same semantics as the flat ``CostModel``
+    fields). ``placement`` maps thread slot -> leaf; ``()`` is the
+    identity."""
     name: str
     levels: tuple = ()
     hit: int = 1
     park_cost: int = 25
     unpark_cost: int = 75
+    resched_cost: int = 150
     placement: tuple = field(default=())
 
     def __post_init__(self):
@@ -159,7 +161,8 @@ class Topology:
             miss=jnp.asarray(self.cost_matrix(n_threads), jnp.int32),
             remote=jnp.asarray(self.remote_matrix(n_threads), bool),
             park=jnp.int32(self.park_cost),
-            unpark=jnp.int32(self.unpark_cost))
+            unpark=jnp.int32(self.unpark_cost),
+            resched=jnp.int32(self.resched_cost))
 
     # -- description ---------------------------------------------------------
     def describe(self) -> dict:
