@@ -11,9 +11,13 @@ Programmatic::
     from repro.bench import BenchConfig, run_suite
     doc = run_suite("coherence", BenchConfig(quick=True))
 """
+from repro.bench.cache import (        # noqa: F401
+    ExperimentCache, configure as configure_cache, get_cache,
+)
 from repro.bench.registry import (     # noqa: F401
     BenchConfig, Suite, get, names, register, run_suite,
 )
 from repro.bench.schema import (       # noqa: F401
-    SCHEMA_VERSION, load_result, save_result, validate_result,
+    SCHEMA_VERSION, TREND_SCHEMA_VERSION, load_result, load_trend,
+    save_result, validate_result,
 )

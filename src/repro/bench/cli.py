@@ -8,12 +8,26 @@ Commands:
                                   regions), ``--topologies`` the machine
                                   topology presets, ``--schedulers`` the
                                   hostile-OS scheduler presets,
+                                  ``--cache`` the experiment-cache state
+                                  plus each suite's latest trend entry
+                                  (wall time / hit rate from
+                                  ``BENCH_trend.json``),
                                   ``--suites`` the suites; flags combine
 * ``run --suite paper --out BENCH_paper.json``
                                 — run a suite, write the schema-valid JSON
                                   result, and (for the ``paper`` suite, or
                                   whenever ``--report`` is given) render
-                                  ``docs/RESULTS.md`` from it
+                                  ``docs/RESULTS.md`` from it. Cells are
+                                  served from the content-addressed
+                                  experiment cache (``bench/cache.py``)
+                                  when their inputs are unchanged;
+                                  ``--no-cache`` forces regeneration
+                                  (the store is still refreshed) and
+                                  ``--cache-dir`` moves the store. Every
+                                  run appends a harness-performance
+                                  entry to ``BENCH_trend.json`` next to
+                                  ``--out`` (``--trend`` to relocate,
+                                  ``--no-trend`` to skip)
 * ``report --in BENCH_paper.json [--out docs/RESULTS.md]``
                                 — re-render markdown from an existing result
 * ``validate --in BENCH_paper.json``
@@ -22,12 +36,15 @@ Commands:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
+from repro.bench import cache as cachemod
 from repro.bench import registry, report, schema
 
 DEFAULT_REPORT = "docs/RESULTS.md"
+DEFAULT_TREND = "BENCH_trend.json"
 
 
 def _parse_threads(text: str) -> tuple:
@@ -60,13 +77,43 @@ def _build_config(args) -> registry.BenchConfig:
     return registry.BenchConfig(**kw)
 
 
+def _print_cache_status(trend_path: str) -> None:
+    store = cachemod.get_cache()
+    d = store.describe()
+    state = "enabled" if d["enabled"] else "DISABLED"
+    print(f"# experiment cache (bench/cache.py, key v"
+          f"{cachemod.CACHE_KEY_VERSION})")
+    print(f"{'store':12s} {d['root']} — {state}, {d['entries']} entries, "
+          f"{d['bytes'] / 1024:.1f} KiB")
+    trend = schema.load_trend(trend_path)
+    latest: dict = {}
+    for e in trend["entries"]:
+        latest[e.get("suite")] = e       # last entry per suite wins
+    if not latest:
+        print(f"{'trend':12s} no {trend_path} yet — populated by "
+              "`run` (per-suite wall time / traces / hit rate)")
+        return
+    print(f"{'trend':12s} latest per suite from {trend_path}:")
+    for name in sorted(latest):
+        e = latest[name]
+        hits, misses = e.get("cache_hits"), e.get("cache_misses")
+        rate = e.get("cache_hit_rate")
+        cache_txt = ("no cacheable cells" if not (hits or misses) else
+                     f"{hits}/{hits + misses} hits "
+                     f"({(rate or 0) * 100:.0f}%)")
+        quick = " (quick)" if e.get("quick") else ""
+        print(f"{'':12s} {name:12s} wall={e.get('wall_s')}s "
+              f"traces={e.get('xla_traces')} {cache_txt}{quick}")
+
+
 def cmd_list(args) -> int:
     show_programs = getattr(args, "programs", False)
     show_topologies = getattr(args, "topologies", False)
     show_schedulers = getattr(args, "schedulers", False)
+    show_cache = getattr(args, "cache", False)
     show_suites = (getattr(args, "suites", False)
                    or not (show_programs or show_topologies
-                           or show_schedulers))
+                           or show_schedulers or show_cache))
     if show_suites:
         print("# suites")
         for name in registry.names():
@@ -107,11 +154,15 @@ def cmd_list(args) -> int:
             print(f"{name:12s} {summary}")
         print(f"{'':12s} pass presets/shorthand to "
               "SimEngine(scheduler=...) or .grid(schedulers=[...])")
+    if show_cache:
+        _print_cache_status(getattr(args, "trend", None) or DEFAULT_TREND)
     return 0
 
 
 def cmd_run(args) -> int:
     cfg = _build_config(args)
+    cachemod.configure(root=args.cache_dir or None,
+                       read=not args.no_cache)
     t0 = time.time()
     if cfg.verbose:
         print("name,us_per_call,derived")
@@ -120,6 +171,14 @@ def cmd_run(args) -> int:
     schema.save_result(doc, args.out)
     print(f"# wrote {args.out} ({len(doc['experiments'])} experiments, "
           f"{time.time() - t0:.1f}s)")
+    if not args.no_trend:
+        trend_path = args.trend or os.path.join(
+            os.path.dirname(args.out) or ".", DEFAULT_TREND)
+        schema.append_trend(trend_path, schema.trend_entry(doc))
+        h = doc["harness"]
+        print(f"# trend -> {trend_path} (wall={h['wall_s']}s "
+              f"traces={h['xla_traces']} cache {h['cache_hits']} hit / "
+              f"{h['cache_misses']} miss)")
     report_path = args.report
     if report_path is None and args.suite == "paper" and not args.no_report:
         report_path = DEFAULT_REPORT
@@ -172,6 +231,12 @@ def build_parser() -> argparse.ArgumentParser:
     ls.add_argument("--schedulers", action="store_true",
                     help="enumerate the hostile-OS scheduler preset "
                          "catalogue (core/sim/sched.py)")
+    ls.add_argument("--cache", action="store_true",
+                    help="show experiment-cache state and each suite's "
+                         "latest trend entry (BENCH_trend.json)")
+    ls.add_argument("--trend", default=None,
+                    help=f"trend log to read for --cache "
+                         f"(default: {DEFAULT_TREND})")
     ls.set_defaults(fn=cmd_list)
 
     run = sub.add_parser("run", help="run a suite and write its JSON result")
@@ -195,6 +260,18 @@ def build_parser() -> argparse.ArgumentParser:
                      help="comma-separated lock subset (default: suite's)")
     run.add_argument("--seed", type=int, default=0)
     run.add_argument("--no-progress", action="store_true")
+    run.add_argument("--no-cache", action="store_true",
+                     help="force regeneration: skip cache lookups "
+                          "(results are still stored for later runs)")
+    run.add_argument("--cache-dir", default="",
+                     help="experiment-cache directory (default: "
+                          f"{cachemod.DEFAULT_ROOT} or "
+                          "$REPRO_BENCH_CACHE_DIR)")
+    run.add_argument("--trend", default=None,
+                     help="harness-performance trend log path (default: "
+                          f"{DEFAULT_TREND} next to --out)")
+    run.add_argument("--no-trend", action="store_true",
+                     help="skip the trend-log append")
     run.set_defaults(fn=cmd_run)
 
     rep = sub.add_parser("report",

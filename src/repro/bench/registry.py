@@ -95,11 +95,41 @@ def _ensure_loaded() -> None:
 
 
 def run_suite(name: str, cfg: BenchConfig | None = None) -> dict:
-    """Build a suite into a schema-valid result document."""
+    """Build a suite into a schema-valid result document.
+
+    The document carries a ``"harness"`` block — wall time, fresh XLA
+    traces (the process-wide ``engine.trace_count()`` delta, so traces
+    paid by throwaway engines are counted too), and experiment-cache
+    hit/miss/store deltas — which ``BENCH_trend.json`` aggregates
+    across runs (see ``schema.trend_entry``).
+    """
+    import time
+
+    from repro.bench import cache as cachemod
+    from repro.core.sim import engine as enginemod
+
     suite = get(name)
     cfg = (cfg or BenchConfig()).resolved()
+    t0 = time.time()
+    traces0 = enginemod.trace_count()
+    store = cachemod.get_cache()
+    stats0 = store.stats.snapshot()
     doc = schema.new_result(suite.name, config=cfg.to_json())
     doc["experiments"] = suite.build(cfg)
+    stats = store.stats.snapshot()
+    hits = stats["hits"] - stats0["hits"]
+    misses = stats["misses"] - stats0["misses"]
+    doc["harness"] = {
+        "wall_s": round(time.time() - t0, 3),
+        "xla_traces": enginemod.trace_count() - traces0,
+        "cache_enabled": store.enabled,
+        "cache_read": store.read,
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "cache_stores": stats["stores"] - stats0["stores"],
+        "cache_hit_rate": (round(hits / (hits + misses), 4)
+                           if hits + misses else None),
+    }
     errors = schema.validate_result(doc)
     if errors:
         raise RuntimeError(f"suite {name!r} produced an invalid document:"

@@ -61,6 +61,22 @@ hostility ladder), and ``hostile_compile`` (scalars — the scheduler-axis
 compile accounting; CI asserts ``compiles_per_grid <= 1`` here as well,
 pinning that schedulers batch as stacked data).
 
+Result documents additionally carry a ``"harness"`` block (written by
+``registry.run_suite``): suite wall time, fresh XLA traces paid, and
+experiment-cache hit/miss/store counts for the run. The block is
+advisory — ``validate_result`` ignores it — but it is what the *trend*
+document aggregates.
+
+The trend document (``repro.bench-trend/v1``, default path
+``BENCH_trend.json`` next to the result) is an append-only, capped
+log of harness performance: one compact entry per suite run
+(``suite``, ``quick``, ``experiments``, ``wall_s``, ``xla_traces``,
+``cache_hits``/``cache_misses``/``cache_stores``, ``cache_hit_rate``,
+``created_unix``), so harness speed regressions are visible in review
+diffs next to ``BENCH_paper.json``. ``append_trend`` is tolerant of a
+missing or corrupt file (it restarts the log) — the trend is telemetry,
+never a build input.
+
 ``validate_result`` is the single source of truth for well-formedness;
 ``save_result``/``load_result`` refuse to write or return an invalid
 document, so a BENCH_*.json on disk is schema-valid by construction.
@@ -73,6 +89,8 @@ import time
 from typing import Any
 
 SCHEMA_VERSION = "repro.bench/v1"
+TREND_SCHEMA_VERSION = "repro.bench-trend/v1"
+TREND_LIMIT = 200           # entries kept per trend file (oldest dropped)
 KINDS = ("sweep", "table", "scalars", "hist")
 
 
@@ -246,6 +264,52 @@ def save_result(doc: dict, path: str) -> None:
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=False)
         f.write("\n")
+
+
+# --- the trend log -----------------------------------------------------------
+
+def trend_entry(doc: dict) -> dict:
+    """Compact trend-log entry from a result document's harness block."""
+    h = doc.get("harness") or {}
+    return {
+        "suite": doc.get("suite"),
+        "quick": bool((doc.get("config") or {}).get("quick")),
+        "experiments": len(doc.get("experiments") or []),
+        "wall_s": h.get("wall_s"),
+        "xla_traces": h.get("xla_traces"),
+        "cache_hits": h.get("cache_hits"),
+        "cache_misses": h.get("cache_misses"),
+        "cache_stores": h.get("cache_stores"),
+        "cache_hit_rate": h.get("cache_hit_rate"),
+        "created_unix": doc.get("created_unix"),
+    }
+
+
+def load_trend(path: str) -> dict:
+    """The trend document at ``path``; a fresh empty one if the file is
+    missing or unreadable (the trend is telemetry, never a build
+    input)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if (isinstance(doc, dict)
+                and doc.get("schema") == TREND_SCHEMA_VERSION
+                and isinstance(doc.get("entries"), list)):
+            return doc
+    except (OSError, json.JSONDecodeError):
+        pass
+    return {"schema": TREND_SCHEMA_VERSION, "entries": []}
+
+
+def append_trend(path: str, entry: dict) -> dict:
+    """Append one run's entry to the trend log at ``path`` (capped at
+    ``TREND_LIMIT`` entries) and return the updated document."""
+    doc = load_trend(path)
+    doc["entries"] = (doc["entries"] + [entry])[-TREND_LIMIT:]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return doc
 
 
 def load_result(path: str) -> dict:

@@ -50,7 +50,7 @@ from repro.bench.schema import (
     hist_experiment, scalars_experiment, sweep_experiment, table_experiment,
 )
 from repro.core.sim import topology as topo
-from repro.core.sim.engine import Workload, session
+from repro.core.sim.engine import Workload
 from repro.core.sim.machine import CostModel
 
 # Lock subsets mirroring what each paper figure actually plots.
@@ -178,7 +178,8 @@ def build_locks_ext(cfg: BenchConfig, reuse_series: list | None = None,
     base = sweep.default_machine(cfg, t_hi)
     # the whole park-cost axis is one stacked-topology grid (one jit):
     # dataclasses.replace keeps every other CostModel field intact
-    g = session("spin_then_park").grid(
+    g = sweep.cached_grid(
+        "spin_then_park",
         seeds=range(cfg.seed0, cfg.seed0 + cfg.n_replicas),
         topologies=[replace(base, park_cost=p, unpark_cost=u)
                     for p, u in costs],
@@ -249,7 +250,7 @@ def build_topology(cfg: BenchConfig) -> list:
     grid_rows, compiles, grids, points = [], 0, 0, 0
     for alg in algs:
         t0 = time.time()
-        g = session(alg).grid(seeds=seeds, topologies=machines,
+        g = sweep.cached_grid(alg, seeds=seeds, topologies=machines,
                               workloads=[wl], threads=[t_hi])
         compiles += g.compiles
         grids += 1
@@ -277,8 +278,8 @@ def build_topology(cfg: BenchConfig) -> list:
     focus = [a for a in TOPOLOGY_FOCUS if a in algs] or list(algs[:1])
     node_series = []
     for alg in focus:
-        g = session(alg).grid(
-            seeds=seeds,
+        g = sweep.cached_grid(
+            alg, seeds=seeds,
             topologies=[CostModel(n_nodes=k)
                         for k in TOPOLOGY_NODE_COUNTS],
             workloads=[wl], threads=[t_hi])
@@ -373,7 +374,7 @@ def build_hostile(cfg: BenchConfig) -> list:
     base_thr: dict = {}
     for alg in algs:
         t0 = time.time()
-        g = session(alg).grid(seeds=seeds, schedulers=scheds,
+        g = sweep.cached_grid(alg, seeds=seeds, schedulers=scheds,
                               workloads=[wl], threads=[t_hi])
         compiles += g.compiles
         grids += 1
@@ -405,7 +406,7 @@ def build_hostile(cfg: BenchConfig) -> list:
     lhp_rows = []
     lhp_pair = ["fair:2500x2", "lhp:2500x600x2"]
     for alg in algs:
-        g = session(alg).grid(seeds=seeds, schedulers=lhp_pair,
+        g = sweep.cached_grid(alg, seeds=seeds, schedulers=lhp_pair,
                               workloads=[wl], threads=[t_hi])
         compiles += g.compiles
         grids += 1
@@ -432,7 +433,7 @@ def build_hostile(cfg: BenchConfig) -> list:
     ladder = HOSTILE_LADDER[::2] if cfg.quick else HOSTILE_LADDER
     from repro.core.locks.programs import ABORTABLE_VARIANTS
     for alg in [a for a in algs if a in ABORTABLE_VARIANTS]:
-        g = session(alg).grid(seeds=seeds, schedulers=list(ladder),
+        g = sweep.cached_grid(alg, seeds=seeds, schedulers=list(ladder),
                               workloads=[wl], threads=[t_hi])
         compiles += g.compiles
         grids += 1

@@ -9,6 +9,13 @@ compiled shape, while the seed and topology axes are stacked
 ``topology`` suite, share a compile (the engine's ``compiles`` counter
 is what the CI batching assertion watches).
 
+Cells are served through the content-addressed experiment cache
+(``bench/cache.py``): ``cached_grid`` keys every cell of a grid call on
+the canonical (program, machine, scheduler, workload, seeds) hash, and
+an all-hit grid reconstructs its ``GridResult`` from the store with
+zero XLA traces. Any miss runs the *whole* grid once (preserving the
+one-jit batching contract) and stores every cell.
+
 Also here: the admission-queue bypass instrumentation (paper §2 bounded
 bypass, §9.4 mitigation) driven against ``repro.core.admission`` policies,
 and the reference-interleaver fairness probes (Table 2).
@@ -21,10 +28,14 @@ from dataclasses import replace
 
 import numpy as np
 
+from repro.bench import cache as cachemod
 from repro.bench.registry import BenchConfig, emit
 from repro.core.admission import POLICIES, max_bypass_bound
 from repro.core.locks.programs import PROGRAMS
-from repro.core.sim.engine import SimEngine, Workload, session
+from repro.core.sim.engine import (
+    GridCell, GridResult, SimEngine, Workload, cost_label, resolve_workload,
+    sched_label, session, _lower_host, _lower_sched_host,
+)
 from repro.core.sim.machine import CostModel, MachineState
 
 ALL_ALGS = tuple(sorted(PROGRAMS))
@@ -47,11 +58,63 @@ def run_grid(prog, n_threads: int, n_steps: int, seeds, n_nodes,
     eng = SimEngine(prog, n_threads=n_threads,
                     workload=Workload(n_steps=n_steps))
     lows = [replace(cost, n_nodes=int(nn)) for nn in np.asarray(n_nodes)]
-    from repro.core.sim.engine import _lower_host, _lower_sched_host
     slo = _lower_sched_host(None, n_threads)
     return eng._run_batch([int(s) for s in np.asarray(seeds)],
                           [_lower_host(c, n_threads) for c in lows],
                           [slo] * len(lows), eng.workload, n_threads)
+
+
+def cached_grid(alg: str, *, seeds, topologies=None, workloads=None,
+                schedulers=None, threads=None) -> GridResult:
+    """``session(alg).grid(...)`` fronted by the experiment cache.
+
+    Computes the content key of every cell the grid *would* produce (in
+    the engine's exact cell order: threads-major, then workload, then
+    topology, then scheduler). All hits -> a ``GridResult`` rebuilt from
+    the store, ``compiles == 0``, no simulation. Any miss -> one real
+    grid call (the full batch, so the one-jit-per-shape contract and its
+    compile accounting are untouched) whose cells are all stored."""
+    eng = session(alg)
+    store = cachemod.get_cache()
+    if not store.enabled:
+        return eng.grid(seeds=seeds, topologies=topologies,
+                        workloads=workloads, schedulers=schedulers,
+                        threads=threads)
+    seeds = [int(s) for s in seeds]
+    topos = (list(topologies) if topologies is not None
+             else [eng.topology])
+    schs = (list(schedulers) if schedulers is not None
+            else [eng.scheduler])
+    wls = [resolve_workload(w) if w is not None else eng.workload
+           for w in (workloads if workloads is not None
+                     else [eng.workload])]
+    ts = list(threads) if threads is not None else [eng.n_threads]
+    plan = []      # (key, n_threads, workload, topo label, sched label)
+    for T in ts:
+        lows = [(cost_label(c), _lower_host(c, T)) for c in topos]
+        slos = [(sched_label(s), _lower_sched_host(s, T)) for s in schs]
+        for wl in wls:
+            fp = cachemod.program_fingerprint(eng.program(T, wl))
+            for lab, lo in lows:
+                for slab, sl in slos:
+                    plan.append((cachemod.cell_key(fp, T, wl, lo, sl,
+                                                   seeds),
+                                 T, wl, lab, slab))
+    found = [store.get(key) for key, *_ in plan]
+    if all(doc is not None for doc in found):
+        store.stats.hits += len(plan)
+        cells = tuple(
+            GridCell(lock=eng.name, n_threads=T, topology=lab,
+                     workload=wl.name, scheduler=slab,
+                     result=cachemod.result_from_doc(doc))
+            for doc, (_, T, wl, lab, slab) in zip(found, plan))
+        return GridResult(cells, 0)
+    store.stats.misses += len(plan)
+    g = eng.grid(seeds=seeds, topologies=topos, workloads=wls,
+                 schedulers=schs, threads=ts)
+    for (key, *_), cell in zip(plan, g.cells):
+        store.put(key, cachemod.result_to_doc(cell.result))
+    return g
 
 
 def default_machine(cfg: BenchConfig, n_threads: int) -> CostModel:
@@ -69,7 +132,8 @@ def bench_cell(alg: str, n_threads: int, cfg: BenchConfig, *,
     if topology is None:
         topology = (default_machine(cfg, n_threads) if n_nodes is None
                     else CostModel(n_nodes=n_nodes))
-    g = session(alg).grid(
+    g = cached_grid(
+        alg,
         seeds=range(cfg.seed0, cfg.seed0 + cfg.n_replicas),
         topologies=[topology],
         workloads=[Workload(ncs_max, cs_shared, cfg.n_steps)],
@@ -116,7 +180,8 @@ def coherence_rows(algs, cfg: BenchConfig, n_threads: int = 10,
     for alg in algs:
         t0 = time.time()
         # both NUMA variants are one stacked-topology grid: one jit/alg
-        g = session(alg).grid(
+        g = cached_grid(
+            alg,
             seeds=range(cfg.seed0, cfg.seed0 + cfg.n_replicas),
             topologies=[CostModel(n_nodes=1), CostModel(n_nodes=2)],
             workloads=[Workload(0, False, cfg.n_steps)],

@@ -26,7 +26,25 @@ program, so each pair gets exactly one entry in the session's explicit
 compile cache; re-running the same shape costs zero new XLA traces.
 ``self.compiles`` counts real traces (incremented from inside the traced
 function), and ``GridResult.compiles`` reports how many a given grid
-call paid.
+call paid. Per-session counters under-count the *process*: code that
+builds a fresh engine per call (``api.bench_lock``, ad-hoc scripts)
+pays traces no session sees, so suite-level accounting (BENCH_trend)
+reads the module-wide ``trace_count()`` instead — it is bumped from the
+same trace-time site as ``self.compiles`` for every engine in the
+process.
+
+Sharded execution: ``SimEngine(shard=...)`` (or the per-call ``shard=``
+override on ``grid``) routes the vmapped point batch through
+``shard_map`` over a 1-D device mesh, splitting the stacked
+seed x topology x scheduler axis across devices. ``"auto"`` (the
+default) shards only when >1 device is visible, so single-device hosts
+fall back transparently to the plain vmap path; ``True`` forces the
+shard_map path even on one device (a mesh of 1 — what the differential
+equality tests exercise in-process). Batches are padded to a multiple
+of the shard count by replicating the last point and trimmed after the
+run; every point is an independent element-wise simulation, so sharded
+and unsharded grids are bit-identical (pinned by
+``tests/test_sweep_cache.py``).
 
 ``bench_lock`` / ``sweep_threads`` (core.sim.api), ``run_ensemble``
 (core.sim.machine) and the ``repro.bench`` sweep driver are now thin
@@ -36,7 +54,8 @@ grid axes buy.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +69,63 @@ from repro.core.sim.machine import (
 )
 
 __all__ = ["Workload", "WORKLOADS", "SimEngine", "GridCell", "GridResult",
-           "cost_label", "sched_label", "session"]
+           "cost_label", "sched_label", "session", "trace_count"]
+
+
+# --- process-wide trace accounting -------------------------------------------
+
+_TRACES = 0
+
+
+def _bump_traces() -> None:
+    global _TRACES
+    _TRACES += 1
+
+
+def trace_count() -> int:
+    """Process-wide count of fresh simulator XLA traces, across *every*
+    engine — including throwaway ones no session counter sees. Deltas of
+    this are what ``BENCH_trend.json`` reports per suite run."""
+    return _TRACES
+
+
+# --- sharded execution -------------------------------------------------------
+
+_SHARD_BROKEN = False     # sticky: mesh construction failed once, stay off
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh(n_shards: int):
+    from repro.sharding.compat import make_mesh
+    return make_mesh((n_shards,), ("cells",))
+
+
+def _resolve_shards(mode, n_points: int) -> int:
+    """Shard count for a batch of ``n_points``: 0 means the plain vmap
+    path; k >= 1 wraps the vmap in ``shard_map`` over a k-device mesh.
+    ``"auto"`` shards only when >1 device is visible; ``True`` forces
+    the shard_map path even on one device; an int asks for that many
+    shards (clamped to the device count)."""
+    global _SHARD_BROKEN
+    if mode in (None, False, 0):
+        return 0
+    try:
+        n_dev = jax.device_count()
+    except Exception:          # pragma: no cover - jax always has devices
+        return 0
+    if mode == "auto":
+        k = n_dev if n_dev > 1 else 0
+    elif mode is True:
+        k = max(n_dev, 1)
+    else:
+        k = max(min(int(mode), n_dev), 1)
+    if k and not _SHARD_BROKEN:
+        try:
+            _mesh(k)
+        except Exception:      # no usable mesh: fall back transparently
+            _SHARD_BROKEN = True
+            k = 0
+    return 0 if _SHARD_BROKEN else k
 
 
 # --- workloads ---------------------------------------------------------------
@@ -193,12 +268,15 @@ class SimEngine:
     ``n_threads`` set session defaults; every method takes per-call
     overrides. ``scheduler`` accepts anything ``sched.resolve`` does
     (``Scheduler``, preset name, ``"fair:QxR"`` shorthand, or ``None``
-    for the dedicated machine).
+    for the dedicated machine). ``shard`` picks the batch execution
+    path (see ``_resolve_shards``): ``"auto"`` (default) splits the
+    stacked point axis across devices when more than one is visible and
+    is a plain vmap otherwise.
     """
 
     def __init__(self, lock, *, topology=None, workload=None,
                  scheduler=None, n_threads: int = 8,
-                 name: str | None = None):
+                 name: str | None = None, shard="auto"):
         if isinstance(lock, Program):
             self._fixed, self._builder = lock, None
             self.name = name or lock.name
@@ -214,6 +292,7 @@ class SimEngine:
                          else Workload())
         self.scheduler = schedmod.resolve(scheduler)
         self.n_threads = n_threads
+        self.shard = shard
         self._progs: dict = {}
         self._jits: dict = {}
         #: fresh XLA traces this session has paid (trace-time counter)
@@ -235,13 +314,16 @@ class SimEngine:
                 T, ncs_max=wl.ncs_max, cs_shared=wl.cs)
         return prog
 
-    def _runner(self, T: int, wl: Workload, n_points: int):
+    def _runner(self, T: int, wl: Workload, n_points: int,
+                n_shards: int = 0):
         """The jitted batched executor for one (threads, workload) shape:
         vmap of the scan engine over ``n_points`` (seed, LoweredCost,
-        LoweredSched) triples. One XLA trace per cache key, counted in
-        ``compiles`` — scheduler scalars are vmapped data, never part of
-        the key."""
-        key = (T, wl.ncs_max, wl.cs_mode, wl.n_steps, n_points)
+        LoweredSched) triples — wrapped in ``shard_map`` over a 1-D
+        device mesh when ``n_shards >= 1``. One XLA trace per cache key,
+        counted in ``compiles`` — scheduler scalars are vmapped data,
+        never part of the key; the shard count IS part of the key, so
+        toggling shard modes never reuses the wrong executable."""
+        key = (T, wl.ncs_max, wl.cs_mode, wl.n_steps, n_points, n_shards)
         fn = self._jits.get(key)
         if fn is None:
             prog = self.program(T, wl)
@@ -249,31 +331,56 @@ class SimEngine:
             def go(seeds, hit, miss, remote, park, unpark, resched,
                    quantum, lhp, cores, jitter):
                 self.compiles += 1     # runs at trace time only
+                _bump_traces()
 
                 def one(seed, h, m, r, p, u, rs, q, lq, co, ji):
                     return run_machine(prog, T, wl.n_steps,
                                        LoweredCost(h, m, r, p, u, rs),
                                        seed,
                                        LoweredSched(q, lq, co, ji))
-                return jax.vmap(one)(seeds, hit, miss, remote, park,
-                                     unpark, resched, quantum, lhp,
-                                     cores, jitter)
+                batched = jax.vmap(one)
+                if n_shards:
+                    from repro.sharding.compat import shard_map
+                    spec = jax.sharding.PartitionSpec("cells")
+                    batched = shard_map(batched, mesh=_mesh(n_shards),
+                                        in_specs=spec, out_specs=spec,
+                                        check_vma=False)
+                return batched(seeds, hit, miss, remote, park,
+                               unpark, resched, quantum, lhp,
+                               cores, jitter)
             fn = self._jits[key] = jax.jit(go)
         return fn
 
-    def _run_batch(self, seeds, lowered, scheds, wl: Workload, T: int):
+    def _run_batch(self, seeds, lowered, scheds, wl: Workload, T: int,
+                   shard=None):
         """Elementwise batch: ``seeds[i]`` against ``lowered[i]`` under
-        ``scheds[i]`` (host-lowered scheduler scalar tuples)."""
+        ``scheds[i]`` (host-lowered scheduler scalar tuples). When the
+        resolved shard count doesn't divide the batch, the batch is
+        padded with copies of its last point and the padding trimmed
+        from the result — per-point simulations are independent, so
+        padding never perturbs real points."""
+        k = _resolve_shards(self.shard if shard is None else shard,
+                            len(lowered))
+        n = len(lowered)
+        seeds, lowered, scheds = list(seeds), list(lowered), list(scheds)
+        pad = (-n) % k if k else 0
+        if pad:
+            seeds += [seeds[-1]] * pad
+            lowered += [lowered[-1]] * pad
+            scheds += [scheds[-1]] * pad
         seeds = jnp.asarray(seeds, jnp.int32)
         stacked = tuple(jnp.asarray(np.stack([lo[i] for lo in lowered]))
                         for i in range(6))
         sstack = tuple(jnp.asarray(np.stack([sc[i] for sc in scheds]))
                        for i in range(4))
-        return self._runner(T, wl, len(lowered))(seeds, *stacked, *sstack)
+        out = self._runner(T, wl, n + pad, k)(seeds, *stacked, *sstack)
+        if pad:
+            out = jax.tree_util.tree_map(lambda a: a[:n], out)
+        return out
 
     # -- execution -----------------------------------------------------------
     def states(self, seeds, *, topology=None, workload=None,
-               scheduler=None, n_threads: int | None = None):
+               scheduler=None, n_threads: int | None = None, shard=None):
         """Raw replica-stacked ``MachineState`` for a seed ensemble on
         one machine (feed to ``summarize_ensemble`` or inspect)."""
         T = n_threads or self.n_threads
@@ -286,7 +393,7 @@ class SimEngine:
         low = _lower_host(cm, T)
         slo = _lower_sched_host(sc, T)
         return self._run_batch(seeds, [low] * len(seeds),
-                               [slo] * len(seeds), wl, T)
+                               [slo] * len(seeds), wl, T, shard=shard)
 
     def run(self, seed: int = 0, **kw) -> BenchResult:
         """One replica, summarized."""
@@ -302,13 +409,16 @@ class SimEngine:
         return summarize_ensemble(self.name, T, s)
 
     def grid(self, *, seeds=(0,), topologies=None, workloads=None,
-             schedulers=None, threads=None) -> GridResult:
+             schedulers=None, threads=None, shard=None) -> GridResult:
         """Cross product of the seed x topology x scheduler x workload x
         threads axes. Seeds, topologies and schedulers batch into one jit
         per (threads, workload) shape — topologies are stacked
         ``LoweredCost`` data and schedulers stacked ``LoweredSched``
         data, so an SMP box and a 4-node NUMA box under dedicated and
-        4x-oversubscribed OS models all share a compile."""
+        4x-oversubscribed OS models all share a compile. ``shard``
+        overrides the session's batch execution path for this call
+        (``False`` = plain vmap, ``True`` = force shard_map, ``"auto"``
+        = shard when >1 device; results are bit-identical either way)."""
         seeds = [int(s) for s in seeds]
         topos = [(cost_label(c), _resolve_cost(c))
                  for c in (topologies if topologies is not None
@@ -331,7 +441,8 @@ class SimEngine:
             sbatch = [sl for _, _, _, sl in pairs for _ in range(S)]
             tiled = [s for _ in pairs for s in seeds]
             for wl in wls:
-                st = self._run_batch(tiled, batch, sbatch, wl, T)
+                st = self._run_batch(tiled, batch, sbatch, wl, T,
+                                     shard=shard)
                 for p, (lab, _, slab, _) in enumerate(pairs):
                     sl = jax.tree_util.tree_map(
                         lambda a, p=p: a[p * S:(p + 1) * S], st)

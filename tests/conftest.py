@@ -1,0 +1,16 @@
+"""Shared pytest fixtures.
+
+The bench experiment cache (``bench/cache.py``) defaults to
+``.bench_cache/`` in the working directory. Point it at a session-scoped
+temp dir for the whole test run so tests neither read a developer's warm
+store (results are bit-identical either way, but counters and timings
+would not be) nor leave one behind in the repo.
+"""
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_experiment_cache(tmp_path_factory):
+    from repro.bench import cache
+    cache.configure(root=str(tmp_path_factory.mktemp("bench_cache")))
+    yield
