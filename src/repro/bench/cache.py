@@ -51,6 +51,7 @@ stored it.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -177,10 +178,8 @@ def _handler_digests(prog) -> list:
 def program_fingerprint(prog) -> str:
     """Canonical semantic hash of a compiled ``Program`` (see module
     docstring for what is and isn't captured)."""
-    try:
+    with contextlib.suppress(KeyError, TypeError):
         return _FP_CACHE[prog]
-    except (KeyError, TypeError):
-        pass
     import jax
     h = hashlib.sha256()
     _feed(h, "repro.bench.cache", CACHE_KEY_VERSION, jax.__version__,
@@ -189,10 +188,9 @@ def program_fingerprint(prog) -> str:
     for d in _handler_digests(prog):
         _feed(h, d)
     fp = h.hexdigest()
-    try:
+    with contextlib.suppress(TypeError):
+        # non-weakrefable custom Program stand-in
         _FP_CACHE[prog] = fp
-    except TypeError:       # non-weakrefable custom Program stand-in
-        pass
     return fp
 
 
@@ -299,10 +297,8 @@ class ExperimentCache:
                 json.dump(doc, f)
             os.replace(tmp, path)
         except OSError:
-            try:
+            with contextlib.suppress(OSError):
                 os.unlink(tmp)
-            except OSError:
-                pass
         self.stats.stores += 1
 
     def entries(self) -> int:
@@ -316,10 +312,8 @@ class ExperimentCache:
         for dirpath, _, files in os.walk(self.root):
             for f in files:
                 if f.endswith(".json"):
-                    try:
+                    with contextlib.suppress(OSError):
                         total += os.path.getsize(os.path.join(dirpath, f))
-                    except OSError:
-                        pass
         return total
 
     def describe(self) -> dict:

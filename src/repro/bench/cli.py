@@ -32,6 +32,17 @@ Commands:
                                 — re-render markdown from an existing result
 * ``validate --in BENCH_paper.json``
                                 — schema-check a result document
+* ``verify [--lock a,b] [--exhaustive]``
+                                — run the static analyzer + small-scope
+                                  model checker over the lock zoo
+                                  (``core/locks/cfg.py`` /
+                                  ``core/locks/verify.py``), print the
+                                  verified property matrix, splice it
+                                  into ``docs/RESULTS.md``, and exit
+                                  non-zero (with minimal counterexample
+                                  traces) on any violation.
+                                  ``--exhaustive`` re-certifies at 3
+                                  threads instead of 2
 """
 from __future__ import annotations
 
@@ -111,9 +122,11 @@ def cmd_list(args) -> int:
     show_topologies = getattr(args, "topologies", False)
     show_schedulers = getattr(args, "schedulers", False)
     show_cache = getattr(args, "cache", False)
+    show_properties = getattr(args, "properties", False)
     show_suites = (getattr(args, "suites", False)
                    or not (show_programs or show_topologies
-                           or show_schedulers or show_cache))
+                           or show_schedulers or show_cache
+                           or show_properties))
     if show_suites:
         print("# suites")
         for name in registry.names():
@@ -154,9 +167,63 @@ def cmd_list(args) -> int:
             print(f"{name:12s} {summary}")
         print(f"{'':12s} pass presets/shorthand to "
               "SimEngine(scheduler=...) or .grid(schedulers=[...])")
+    if show_properties:
+        from repro.core.locks import verify as verify_mod
+        print("# verified/declared lock properties (structural analysis "
+              "— core/locks/cfg.py; `verify` adds the model check)")
+        verdicts = verify_mod.verify_all(model=False)
+        print(verify_mod.render_matrix(verdicts))
     if show_cache:
         _print_cache_status(getattr(args, "trend", None) or DEFAULT_TREND)
     return 0
+
+
+def cmd_verify(args) -> int:
+    from repro.core.locks import verify as verify_mod
+    names = tuple(n for n in (args.lock or "").split(",") if n)
+    t0 = time.time()
+
+    def progress(v):
+        if not args.no_progress:
+            state = "ok" if v.ok else "FAIL"
+            cert = v.check.certificate if v.check else "structural only"
+            print(f"# {v.name:26s} {state}  {cert}", flush=True)
+
+    try:
+        verdicts = verify_mod.verify_all(
+            names=names, exhaustive=args.exhaustive,
+            episodes=args.episodes, max_states=args.max_states,
+            on_result=progress)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    print()
+    print(verify_mod.render_matrix(verdicts))
+    bad = [v for v in verdicts if not v.ok]
+    for v in bad:
+        print(f"\n# {v.name}: VERIFICATION FAILED")
+        if v.error:
+            print(f"  compile/spec error: {v.error}")
+        for viol in v.structural_violations:
+            print(f"  structural: {viol}")
+        if v.check is not None and not v.check.ok:
+            print(f"  model check ({v.check.violation}): {v.check.detail}")
+            print(f"  minimal counterexample "
+                  f"({len(v.check.trace)} transitions):")
+            for line in v.check.trace:
+                print(f"    {line}")
+    scope = "T=3" if args.exhaustive else "T=2"
+    print(f"\n# {len(verdicts) - len(bad)}/{len(verdicts)} locks certified "
+          f"({scope}, {time.time() - t0:.1f}s)")
+    if not args.no_results and not names:
+        from repro.bench import report as reportmod
+        note = ("Generated by `python -m repro.bench verify"
+                + (" --exhaustive" if args.exhaustive else "") + "`.")
+        reportmod.splice_section(
+            args.results, reportmod.VERIFY_HEADER,
+            reportmod.verify_section_lines(verdicts, note))
+        print(f"# spliced matrix into {args.results}")
+    return 1 if bad else 0
 
 
 def cmd_run(args) -> int:
@@ -231,6 +298,9 @@ def build_parser() -> argparse.ArgumentParser:
     ls.add_argument("--schedulers", action="store_true",
                     help="enumerate the hostile-OS scheduler preset "
                          "catalogue (core/sim/sched.py)")
+    ls.add_argument("--properties", action="store_true",
+                    help="print the per-lock verified/declared property "
+                         "matrix (structural analysis only; see `verify`)")
     ls.add_argument("--cache", action="store_true",
                     help="show experiment-cache state and each suite's "
                          "latest trend entry (BENCH_trend.json)")
@@ -283,6 +353,29 @@ def build_parser() -> argparse.ArgumentParser:
     val = sub.add_parser("validate", help="schema-check a result document")
     val.add_argument("--in", dest="infile", required=True)
     val.set_defaults(fn=cmd_validate)
+
+    ver = sub.add_parser(
+        "verify",
+        help="statically verify the lock zoo and model-check all "
+             "interleavings at small scope")
+    ver.add_argument("--lock", default="",
+                     help="comma-separated lock subset (default: all; "
+                          "subsets skip the RESULTS.md splice)")
+    ver.add_argument("--exhaustive", action="store_true",
+                     help="model-check at 3 threads (default certifies "
+                          "at 2)")
+    ver.add_argument("--episodes", type=int, default=2,
+                     help="lock episodes per thread in the model check")
+    ver.add_argument("--max-states", type=int, default=200_000,
+                     help="state-expansion budget per lock (exceeding it "
+                          "downgrades the certificate to 'bounded')")
+    ver.add_argument("--results", default=DEFAULT_REPORT,
+                     help="markdown file to splice the property matrix "
+                          f"into (default: {DEFAULT_REPORT})")
+    ver.add_argument("--no-results", action="store_true",
+                     help="skip the RESULTS.md splice")
+    ver.add_argument("--no-progress", action="store_true")
+    ver.set_defaults(fn=cmd_verify)
     return ap
 
 

@@ -83,6 +83,7 @@ document, so a BENCH_*.json on disk is schema-valid by construction.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import sys
 import time
@@ -289,15 +290,13 @@ def load_trend(path: str) -> dict:
     """The trend document at ``path``; a fresh empty one if the file is
     missing or unreadable (the trend is telemetry, never a build
     input)."""
-    try:
+    with contextlib.suppress(OSError, json.JSONDecodeError):
         with open(path) as f:
             doc = json.load(f)
         if (isinstance(doc, dict)
                 and doc.get("schema") == TREND_SCHEMA_VERSION
                 and isinstance(doc.get("entries"), list)):
             return doc
-    except (OSError, json.JSONDecodeError):
-        pass
     return {"schema": TREND_SCHEMA_VERSION, "entries": []}
 
 

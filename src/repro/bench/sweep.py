@@ -46,7 +46,7 @@ POINT_METRICS = ("throughput", "miss_per_episode", "inval_per_episode",
 
 
 def run_grid(prog, n_threads: int, n_steps: int, seeds, n_nodes,
-             cost: CostModel = CostModel()) -> MachineState:
+             cost: CostModel = CostModel()) -> MachineState:  # noqa: B008
     """Deprecated shim: elementwise (seed, n_nodes) batch in one jit.
     Per-point cost models are now built with ``dataclasses.replace`` —
     every ``CostModel`` field rides through — and lowered to the stacked

@@ -143,19 +143,19 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
 
 # Reduced configs for CPU smoke tests: same family/topology, tiny dims.
 def smoke_config(cfg: ModelConfig) -> ModelConfig:
-    kw: dict[str, Any] = dict(
-        n_layers=min(cfg.n_layers, 4),
-        d_model=128,
-        n_heads=4,
-        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
-        head_dim=32 if cfg.head_dim else 0,
-        d_ff=256 if cfg.d_ff else 0,
-        vocab_size=512,
-        enc_frames=32,
-        n_patches=min(cfg.n_patches, 8),
-        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
-        scan_layers=cfg.scan_layers,
-    )
+    kw: dict[str, Any] = {
+        "n_layers": min(cfg.n_layers, 4),
+        "d_model": 128,
+        "n_heads": 4,
+        "n_kv_heads": min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
+        "head_dim": 32 if cfg.head_dim else 0,
+        "d_ff": 256 if cfg.d_ff else 0,
+        "vocab_size": 512,
+        "enc_frames": 32,
+        "n_patches": min(cfg.n_patches, 8),
+        "sliding_window": min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        "scan_layers": cfg.scan_layers,
+    }
     if cfg.attention == "mla":
         kw.update(kv_lora_rank=32, q_lora_rank=48, qk_nope_dim=32,
                   qk_rope_dim=16, v_head_dim=32, head_dim=0)

@@ -168,5 +168,22 @@ def compile_spec(author: Callable, n_threads: int, *, ncs_max: int = 0,
         except Exception as e:
             raise SpecError(
                 f"{spec.name}.{st.label}: step failed to trace: {e}") from e
+    # Cheap structural verification (core/locks/cfg.py): loop-free
+    # doorway/release by default, plus two-sided checks of any
+    # s.expect(...) declarations. Violations are SpecErrors with
+    # phase/label provenance; a spec body the recorder cannot replay
+    # (exotic jnp use) degrades to unverified rather than failing the
+    # compile — the `repro.bench verify` CLI reports it as such.
+    from repro.core.locks import cfg as _cfg
+    try:
+        facts = _cfg.analyze(spec)
+    except SpecError:
+        raise
+    except Exception:
+        facts = None
+    if facts is not None:
+        violations = _cfg.check_spec(facts)
+        if violations:
+            raise SpecError(f"{spec.name}: {violations[0]}")
     return Program(handlers=handlers, n_mem=spec.n_mem, home=spec.home(),
                    name=spec.name, init_mem=tuple(spec.inits))

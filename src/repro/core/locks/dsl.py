@@ -305,8 +305,28 @@ class LockSpec:
         self.words: dict[str, int] = {}
         self.inits: list[tuple] = []
         self.regmap: dict[str, int] = {}
+        self.expectations: dict = {}
         self._next_word = 0
         self._array_top = ELEM_BASE
+
+    # -- declared property expectations --------------------------------------
+    def expect(self, **props) -> None:
+        """Declare the paper-table properties this lock claims, checked
+        *two-sided* against the static analyzer (``core/locks/cfg.py``)
+        at compile time — a ticket lock must say ``spin="shared"``, and
+        a stale declaration is as much an error as a false claim.
+
+        Keys: ``doorway`` ("constant" / "none" / "unbounded"),
+        ``release`` ("wait_free" / "waits" / "unbounded"), ``spin``
+        ("own" / "cell" / "shared"), ``footprint`` (sequestered words
+        per thread), ``bypass`` (admission-bypass bound, ``None`` for
+        unbounded — certified by the small-scope model checker in
+        ``core/locks/verify.py``, not at compile time). Undeclared
+        specs get only the safety floor: loop-free doorway/release."""
+        from repro.core.locks.cfg import validate_expectations
+        merged = {**self.expectations, **props}
+        validate_expectations(merged, self.name)
+        self.expectations = merged
 
     # -- memory declarations -------------------------------------------------
     def word(self, name: str, init: int | None = None) -> int:

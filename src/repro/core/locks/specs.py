@@ -46,6 +46,8 @@ def reciprocating(s):
     arrivals = s.word("arrivals")
     elem = s.per_thread("element")
     s.regs("succ", "eos")
+    s.expect(doorway="constant", release="wait_free", spin="own",
+             footprint=1, bypass=2)
 
     @s.step("doorway")
     def prepare(c):                         # E = 0 (clean wait element)
@@ -99,6 +101,8 @@ def ticket(s):
     collapse case)."""
     tk, gr = s.word("ticket"), s.word("grant")
     s.regs("my")
+    s.expect(doorway="constant", release="wait_free", spin="shared",
+             footprint=0, bypass=1)
 
     @s.step("doorway")
     def take(c):
@@ -131,6 +135,8 @@ def retrograde(s):
     tk, gr = s.word("ticket"), s.word("grant")
     top, bs = s.word("top"), s.word("base")
     s.regs("my", "g", "hi", "tmp")
+    s.expect(doorway="constant", release="wait_free", spin="shared",
+             footprint=0, bypass=2)
 
     @s.step("doorway")
     def take(c):
@@ -198,6 +204,8 @@ def mcs(s):
     tail = s.word("tail")
     nxt = s.per_thread("next")
     lck = s.per_thread("locked")
+    s.expect(doorway="constant", release="waits", spin="own",
+             footprint=2, bypass=1)
 
     @s.step("doorway")
     def clear_next(c):
@@ -257,6 +265,8 @@ def clh(s):
     tail = s.word("tail", init=dummy.base)
     head = s.word("head")
     s.regs("mynode", "pred")
+    s.expect(doorway="constant", release="wait_free", spin="cell",
+             footprint=1, bypass=1)
 
     @s.step("doorway")
     def claim(c):                           # lazy first-episode node init
@@ -301,6 +311,8 @@ def hemlock(s):
     tail = s.word("tail")
     grant = s.per_thread("grant")
     s.regs("pred")
+    s.expect(doorway="constant", release="waits", spin="cell",
+             footprint=1, bypass=1)
 
     @s.step("doorway")
     def swap_tail(c):
@@ -343,6 +355,8 @@ def ttas(s):
     """Global spinning on one flag word; every handoff is a broadcast
     invalidation storm (the other Fig. 1 collapse case)."""
     flag = s.word("flag")
+    s.expect(doorway="none", release="wait_free", spin="shared",
+             footprint=0, bypass=None)
 
     @s.step("waiting")
     def wait_free(c):
@@ -372,6 +386,8 @@ def anderson(s):
     nxt = s.word("next_slot")
     slots = s.array("slots", s.T, init={0: 1})
     s.regs("slot")
+    s.expect(doorway="constant", release="wait_free", spin="cell",
+             footprint=0, bypass=1)
 
     @s.step("doorway")
     def take(c):
@@ -414,6 +430,8 @@ def hapax(s):
     tk = s.word("ticket")
     cells = s.array("cells", s.T)
     s.regs("my")
+    s.expect(doorway="constant", release="wait_free", spin="cell",
+             footprint=0, bypass=1)
 
     @s.step("doorway")
     def take(c):
@@ -450,6 +468,8 @@ def fissile(s):
     tk = s.word("ticket")
     cells = s.array("cells", s.T)
     s.regs("my")
+    s.expect(doorway="constant", release="wait_free", spin="shared",
+             footprint=0, bypass=None)
 
     @s.step("doorway")
     def try_fast(c):
@@ -502,6 +522,8 @@ def spin_then_park(s):
     nxt = s.per_thread("next")
     lck = s.per_thread("locked")
     s.regs("spins")
+    s.expect(doorway="constant", release="waits", spin="own",
+             footprint=2, bypass=1)
 
     @s.step("doorway")
     def clear_next(c):
@@ -590,6 +612,10 @@ def reciprocating_abortable(s):
     bs = s.word("base")
     cells = s.array("cells", s.T, init={0: 1})   # baton for ticket 0
     s.regs("my", "tries", "g", "hi", "tmp")
+    # The release walk retracts ghost batons in a loop (retract ->
+    # load_base) — the declared opt-out the gate's safety floor points at.
+    s.expect(doorway="constant", release="unbounded", spin="cell",
+             footprint=0, bypass=2)
 
     def park(c, to="round"):
         return c.op(PARK_EQ_TIMEOUT(cells.at(c.r.my % s.T),
@@ -726,6 +752,8 @@ def mcs_timeout(s):
     nxt = s.per_thread("next")
     lck = s.per_thread("locked")
     s.regs("tries")
+    s.expect(doorway="constant", release="waits", spin="own",
+             footprint=2, bypass=1)
 
     @s.step("doorway")
     def clear_next(c):

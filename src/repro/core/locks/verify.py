@@ -1,0 +1,514 @@
+"""Small-scope exhaustive verification of compiled lock specs.
+
+``core/locks/cfg.py`` proves the *shape* claims (constant-time doorway
+and release, spin locality, waiting footprint) from the control-flow
+graph alone. This module proves the *interleaving* claims the CFG
+cannot: for a small thread count and a bounded number of lock episodes
+per thread, :func:`model_check` enumerates **all** interleavings of the
+compiled handler table — not random schedules like the PR-5 hypothesis
+harness — and certifies
+
+* **mutual exclusion** — never two threads with a pending access to the
+  shared CS word (the injected ``enter_cs`` scaffolding, word 4);
+* **deadlock freedom** — no reachable state where every unfinished
+  thread is blocked;
+* **no lost wakeups** — no reachable state from which a blocked thread
+  can never run again while others still can (a *trap*: under the
+  untimed semantics a waiter whose wakeup was dropped stays blocked in
+  every future, which the post-hoc reverse reachability pass detects
+  even before the other threads drain their episodes into a deadlock);
+* **bounded bypass** — per waiting thread, between its ``arrive`` and
+  its ``admit``, no other thread is admitted more than ``bypass`` times
+  (the paper's reciprocating-family bound is 2; counters saturate, so
+  declaring ``bypass=None`` keeps the state space finite for barging
+  locks).
+
+The model is *untimed*: one atomic transition executes a thread's
+pending memory op and runs the handler at its next pc (handlers are
+pure local computation, so this is the natural atomicity grain of
+``core/sim/machine.py``). Blocking ops gate enabledness instead of
+costing cycles; a timed park whose condition is false takes its timeout
+transition (every finite patience is eventually exceeded under some
+schedule, so the untimed model must always offer it). Handler calls are
+memoized on ``(t, pc, regs, res)`` — the PRNG only feeds the NCS delay,
+which is zero here.
+
+On violation the BFS parent chain yields a *minimal* counterexample
+trace (fewest transitions from the initial state), with step labels and
+symbolic operand names for provenance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+from repro.core.locks import cfg as cfg_mod
+from repro.core.locks.compile import build_spec, compile_spec
+from repro.core.locks.dsl import CS_WORD, LockSpec, SpecError
+from repro.core.sim import machine as M
+
+__all__ = ["CheckResult", "LockVerdict", "model_check", "verify_lock",
+           "verify_all", "matrix_columns", "matrix_rows", "render_matrix"]
+
+
+# ---------------------------------------------------------------------------
+# The untimed machine: op execution + enabledness
+# ---------------------------------------------------------------------------
+def _op_enabled(op: tuple, mem: tuple) -> bool:
+    kind, addr, a, _ = op
+    mval = mem[addr]
+    if kind in (M.SPIN_EQ, M.PARK_EQ):
+        return mval == a
+    if kind == M.SPIN_NE:
+        return mval != a
+    return True                     # timed parks always fire (timeout)
+
+
+def _op_exec(op: tuple, mem: tuple):
+    """Execute an (enabled) op: -> (res, write-or-None)."""
+    kind, addr, a, b = op
+    mval = mem[addr]
+    if kind in (M.STORE, M.XCHG):
+        return mval, (addr, a)
+    if kind == M.CAS:
+        ok = 1 if mval == a else 0
+        return mval * 2 + ok, ((addr, b) if ok else None)
+    if kind == M.FAA:
+        return mval, (addr, mval + a)
+    if kind == M.PARK_EQ_TIMEOUT:
+        return mval * 2 + (1 if mval == a else 0), None
+    if kind == M.PARK_NE_TIMEOUT:
+        return mval * 2 + (1 if mval != a else 0), None
+    return mval, None               # NOP / DELAY / LOAD / satisfied waits
+
+
+def _addr_name(spec: LockSpec, addr: int) -> str:
+    for n, a in spec.words.items():
+        if a == addr:
+            return n
+    if addr == CS_WORD:
+        return "CS"
+    for r in spec.regions:
+        if r.base <= addr < r.base + r.size:
+            return f"{r.name}[{addr - r.base}]"
+    return str(addr)
+
+
+def _op_desc(spec: LockSpec, op: tuple) -> str:
+    kind, addr, a, b = op
+    name = cfg_mod.KIND_NAMES.get(kind, str(kind))
+    at = _addr_name(spec, addr)
+    if kind in (M.STORE, M.XCHG, M.FAA):
+        return f"{name}({at}, {a})"
+    if kind == M.CAS:
+        return f"{name}({at}, {a}->{b})"
+    if kind in (M.SPIN_EQ, M.SPIN_NE, M.PARK_EQ,
+                M.PARK_EQ_TIMEOUT, M.PARK_NE_TIMEOUT):
+        return f"{name}({at}, {a})"
+    return f"{name}({at})"
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+@dataclass
+class CheckResult:
+    """Outcome of one exhaustive small-scope run."""
+    name: str
+    n_threads: int
+    episodes: int
+    states: int                 # states expanded
+    closed: bool                # state space exhausted within budget
+    ok: bool
+    violation: str | None = None    # mutual_exclusion | deadlock |
+    #                                 lost_wakeup | bypass
+    detail: str = ""
+    trace: list = field(default_factory=list)   # minimal counterexample
+    max_bypass: int = 0         # observed waiting-window bypass (saturated)
+    bypass_cap: int = 0         # saturation cap (observed == cap: ">=cap")
+
+    @property
+    def certificate(self) -> str:
+        if not self.ok:
+            return f"✗ {self.violation}"
+        scope = f"T={self.n_threads} E={self.episodes}"
+        kind = "exhaustive" if self.closed else "bounded"
+        return f"✓ {kind} ({scope}, {self.states} states)"
+
+
+def model_check(author, n_threads: int = 2, *, episodes: int = 2,
+                max_states: int = 200_000, name: str | None = None,
+                bypass_bound: int | None = None,
+                bypass_cap: int | None = None) -> CheckResult:
+    """Exhaustively enumerate all interleavings of the compiled spec for
+    ``n_threads`` threads x ``episodes`` lock episodes each.
+
+    ``bypass_bound`` (an int) turns the waiting-window bypass counter
+    into a checked property; ``None`` only measures it. Counters
+    saturate at ``bypass_cap`` (default ``bound + 1``, or 3) so barging
+    locks keep a finite state space.
+    """
+    spec = build_spec(author, n_threads, name)
+    prog = compile_spec(author, n_threads, name=name)
+    T = n_threads
+    cap = bypass_cap if bypass_cap is not None else (
+        (bypass_bound + 1) if bypass_bound is not None else 3)
+
+    # pc -> label (provenance for traces): mirrors compile_spec's layout
+    labels = {0: "ncs"}
+    for i, st in enumerate(spec.steps):
+        labels[1 + i] = st.label
+    labels[1 + len(spec.steps)] = "@cs"
+
+    mem0 = [0] * prog.n_mem
+    for a, v in prog.init_mem:
+        mem0[a] = v
+    mem0 = tuple(mem0)
+    NOPOP = (int(M.NOP), 0, 0, 0)
+    zeros = (0,) * prog.n_regs
+    zctr = (0,) * T
+    # thread tuple: (pc, regs, op-or-None, episodes, waiting, counters)
+    th0 = (0, zeros, NOPOP, 0, False, zctr)
+    init = (mem0, (th0,) * T)
+
+    memo: dict = {}
+
+    def call(t, pc, regs, res):
+        key = (t, pc, regs, res)
+        hit = memo.get(key)
+        if hit is None:
+            r, p, op, arrive, admit, _ = prog.handlers[pc](
+                jnp.int32(t), jnp.asarray(regs, jnp.int32),
+                jnp.int32(res), jnp.uint32(1))
+            hit = (tuple(int(x) for x in r), int(p),
+                   tuple(int(x) for x in op), bool(arrive), bool(admit))
+            memo[key] = hit
+        return hit
+
+    def cs_occupants(threads):
+        return [t for t, th in enumerate(threads)
+                if th[2] is not None and th[2][0] in (M.LOAD, M.STORE)
+                and th[2][1] == CS_WORD]
+
+    ids: dict = {init: 0}
+    states = [init]
+    parents = [(-1, -1, "")]        # (parent id, thread, transition desc)
+    succs: list = [[]]
+    enabled_of: list = [None]
+    depth = [0]
+    frontier = [0]
+    expanded = 0
+    max_bypass_seen = 0
+    violation = None                # (kind, detail, state id)
+
+    def trace_to(sid) -> list:
+        out = []
+        while sid > 0:
+            pid, t, desc = parents[sid]
+            out.append(f"T{t}: {desc}")
+            sid = pid
+        out.reverse()
+        return out
+
+    while frontier and violation is None:
+        next_frontier = []
+        for sid in frontier:
+            if violation is not None:
+                break
+            if expanded >= max_states:
+                continue            # leave unexpanded (open frontier)
+            expanded += 1
+            mem, threads = states[sid]
+            en = [t for t in range(T) if threads[t][2] is not None
+                  and _op_enabled(threads[t][2], mem)]
+            enabled_of[sid] = en
+            if not en:
+                if any(th[2] is not None for th in threads):
+                    stuck = "; ".join(
+                        f"T{t} blocked at {_op_desc(spec, th[2])}"
+                        for t, th in enumerate(threads) if th[2] is not None)
+                    violation = ("deadlock", stuck, sid)
+                continue
+            for t in en:
+                pc, regs, op, eps, waiting, ctr = threads[t]
+                res, write = _op_exec(op, mem)
+                mem2 = mem
+                if write is not None:
+                    lm = list(mem)
+                    lm[write[0]] = write[1]
+                    mem2 = tuple(lm)
+                desc = _op_desc(spec, op)
+                if pc == 0 and eps >= episodes:
+                    th2 = (0, regs, None, eps, False, zctr)
+                    arrive = admit = False
+                    desc += " -> done"
+                else:
+                    regs2, pc2, op2, arrive, admit = call(t, pc, regs, res)
+                    eps2 = eps + (1 if pc == 0 else 0)
+                    th2 = (pc2, regs2, op2, eps2, waiting, ctr)
+                    desc += f" -> {labels.get(pc, pc)}"
+                nthreads = list(threads)
+                nthreads[t] = th2
+                # --- bypass windows (waiting-window admission counting) ----
+                closed_window = None
+                if arrive:
+                    pcx, rgx, opx, epx, _, _ = nthreads[t]
+                    nthreads[t] = (pcx, rgx, opx, epx, True, zctr)
+                if admit:
+                    for w in range(T):
+                        if w == t:
+                            continue
+                        pcw, rgw, opw, epw, waw, ctw = nthreads[w]
+                        if waw:
+                            lc = list(ctw)
+                            lc[t] = min(lc[t] + 1, cap)
+                            nthreads[w] = (pcw, rgw, opw, epw, True,
+                                           tuple(lc))
+                    pcx, rgx, opx, epx, wax, ctx = nthreads[t]
+                    if wax:
+                        closed_window = max(ctx)
+                        max_bypass_seen = max(max_bypass_seen,
+                                              closed_window)
+                        nthreads[t] = (pcx, rgx, opx, epx, False, zctr)
+                ns = (mem2, tuple(nthreads))
+                nid = ids.get(ns)
+                if nid is None:
+                    nid = len(states)
+                    ids[ns] = nid
+                    states.append(ns)
+                    parents.append((sid, t, desc))
+                    succs.append([])
+                    enabled_of.append(None)
+                    depth.append(depth[sid] + 1)
+                    next_frontier.append(nid)
+                succs[sid].append(nid)
+                # --- property checks on the new state ----------------------
+                occ = cs_occupants(ns[1])
+                if len(occ) > 1:
+                    parents[nid] = (sid, t, desc)
+                    violation = (
+                        "mutual_exclusion",
+                        f"threads {occ} pending CS access together", nid)
+                    break
+                if (closed_window is not None and bypass_bound is not None
+                        and closed_window > bypass_bound):
+                    parents[nid] = (sid, t, desc)
+                    violation = (
+                        "bypass",
+                        f"T{t} admitted after a rival was admitted "
+                        f"{closed_window}x in its waiting window "
+                        f"(declared bound {bypass_bound})", nid)
+                    break
+        frontier = next_frontier
+
+    closed = not frontier and expanded < max_states and violation is None
+
+    # --- lost wakeups: trap detection over the explored graph --------------
+    if violation is None:
+        unexpanded = {i for i, e in enumerate(enabled_of) if e is None}
+        preds: dict = {}
+        for i, ss in enumerate(succs):
+            for j in ss:
+                preds.setdefault(j, []).append(i)
+        for t in range(T):
+            good = set(unexpanded)
+            good.update(i for i, e in enumerate(enabled_of)
+                        if e is not None and t in e)
+            seen = set(good)
+            stack = list(good)
+            while stack:
+                j = stack.pop()
+                for i in preds.get(j, ()):
+                    if i not in seen:
+                        seen.add(i)
+                        stack.append(i)
+            trapped = [i for i in range(len(states))
+                       if i not in seen and i not in unexpanded
+                       and states[i][1][t][2] is not None]
+            if trapped:
+                sid = min(trapped, key=depth.__getitem__)
+                op = states[sid][1][t][2]
+                violation = (
+                    "lost_wakeup",
+                    f"T{t} is blocked at {_op_desc(spec, op)} and can "
+                    "never run again in any future schedule", sid)
+                break
+
+    if violation is not None:
+        kind, detail, sid = violation
+        return CheckResult(
+            name=spec.name, n_threads=T, episodes=episodes,
+            states=expanded, closed=False, ok=False, violation=kind,
+            detail=detail, trace=trace_to(sid),
+            max_bypass=max_bypass_seen, bypass_cap=cap)
+    return CheckResult(
+        name=spec.name, n_threads=T, episodes=episodes, states=expanded,
+        closed=closed, ok=True, max_bypass=max_bypass_seen, bypass_cap=cap)
+
+
+# ---------------------------------------------------------------------------
+# The per-lock verdict: structural facts + declarations + model check
+# ---------------------------------------------------------------------------
+@dataclass
+class LockVerdict:
+    name: str
+    facts: cfg_mod.StructuralFacts | None
+    expectations: dict
+    structural_violations: list
+    check: CheckResult | None
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return (self.error is None and not self.structural_violations
+                and (self.check is None or self.check.ok))
+
+
+def verify_lock(author, name: str | None = None, *,
+                n_threads: int = 2, episodes: int = 2,
+                max_states: int = 200_000, model: bool = True,
+                exhaustive: bool = False) -> LockVerdict:
+    """Run the full pipeline on one spec: CFG analyses, two-sided
+    declaration checks, and the small-scope model check (at 2 threads;
+    ``exhaustive`` re-runs at 3 threads; ``model=False`` keeps only the
+    cheap structural passes — used by ``list --properties``)."""
+    name = name or getattr(author, "__name__", "spec")
+    try:
+        spec = build_spec(author, 4, name)
+        facts = cfg_mod.analyze(spec)
+        violations = cfg_mod.check_spec(facts)
+        exp = dict(spec.expectations)
+    except SpecError as e:
+        return LockVerdict(name=name, facts=None, expectations={},
+                           structural_violations=[], check=None,
+                           error=str(e))
+    if not model:
+        return LockVerdict(name=name, facts=facts, expectations=exp,
+                           structural_violations=violations, check=None)
+    bound = exp.get("bypass")
+    check = None
+    try:
+        check = model_check(author, n_threads, episodes=episodes,
+                            max_states=max_states, name=name,
+                            bypass_bound=bound)
+        if check.ok and exhaustive:
+            check = model_check(author, 3, episodes=episodes,
+                                max_states=max_states, name=name,
+                                bypass_bound=bound)
+    except SpecError as e:
+        return LockVerdict(name=name, facts=facts, expectations=exp,
+                           structural_violations=violations, check=None,
+                           error=str(e))
+    return LockVerdict(name=name, facts=facts, expectations=exp,
+                       structural_violations=violations, check=check)
+
+
+def verify_all(specs: dict | None = None, *, names: tuple = (),
+               exhaustive: bool = False, episodes: int = 2,
+               max_states: int = 200_000, model: bool = True,
+               on_result=None) -> list:
+    if specs is None:
+        from repro.core.locks.specs import SPECS as specs
+    picked = {n: a for n, a in specs.items() if not names or n in names}
+    unknown = set(names) - set(picked)
+    if unknown:
+        raise KeyError(f"unknown lock(s): {sorted(unknown)} "
+                       f"(have: {sorted(specs)})")
+    out = []
+    for n, author in picked.items():
+        v = verify_lock(author, n, exhaustive=exhaustive, model=model,
+                        episodes=episodes, max_states=max_states)
+        out.append(v)
+        if on_result is not None:
+            on_result(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The verified property matrix (terminal + RESULTS.md)
+# ---------------------------------------------------------------------------
+def matrix_columns() -> list:
+    return ["lock", "doorway", "release", "spin", "footprint", "bypass",
+            "model_check"]
+
+
+def _cell_doorway(v: LockVerdict) -> str:
+    g = v.facts.doorway_grade
+    if g == "constant":
+        return f"✓ ≤{v.facts.doorway.bound} ops"
+    if g == "none":
+        return "— none (not FCFS)"
+    return "✗ declared" if v.expectations.get("doorway") == g \
+        else f"✗ {g}"
+
+
+def _cell_release(v: LockVerdict) -> str:
+    g = v.facts.release_grade
+    if g == "wait_free":
+        return f"✓ wait-free ≤{v.facts.release.bound}"
+    if g == "waits":
+        return ("✓ bounded ≤{}, waits at {}".format(
+            v.facts.release.bound, ",".join(v.facts.release.waits)))
+    return "✗ declared" if v.expectations.get("release") == g \
+        else f"✗ {g}"
+
+
+def _cell_spin(v: LockVerdict) -> str:
+    lv = v.facts.spin_level
+    return {"own": "✓ own cell", "cell": "✓ per-waiter cell",
+            "shared": "✗ declared shared" if v.expectations.get("spin")
+            == "shared" else "✗ shared",
+            "none": "— no waiting"}[lv]
+
+
+def _cell_bypass(v: LockVerdict) -> str:
+    if "bypass" not in v.expectations:
+        return "—"
+    b = v.expectations["bypass"]
+    if v.check is None:             # structural-only run: declared, unproven
+        return ("✗ declared unbounded" if b is None
+                else f"declared ≤{b} (run `verify`)")
+    seen = v.check.max_bypass
+    seen_s = f"≥{seen}" if seen >= v.check.bypass_cap else str(seen)
+    if b is None:
+        return f"✗ declared unbounded (saw {seen_s})"
+    return f"✓ ≤{b} (saw {seen_s})"
+
+
+def matrix_rows(verdicts: list) -> list:
+    rows = []
+    for v in verdicts:
+        if v.error is not None or v.facts is None:
+            rows.append({"lock": v.name, "doorway": "✗ error",
+                         "release": "—", "spin": "—", "footprint": "—",
+                         "bypass": "—", "model_check": v.error or "—"})
+            continue
+        row = {
+            "lock": v.name,
+            "doorway": _cell_doorway(v),
+            "release": _cell_release(v),
+            "spin": _cell_spin(v),
+            "footprint": f"✓ {v.facts.footprint} word(s)",
+            "bypass": _cell_bypass(v),
+            "model_check": (v.check.certificate if v.check is not None
+                            else "—"),
+        }
+        if v.structural_violations:
+            row["doorway"] = "✗ " + v.structural_violations[0]
+        rows.append(row)
+    return rows
+
+
+def render_matrix(verdicts: list) -> str:
+    """Terminal rendering (also used by ``repro.bench list
+    --properties``)."""
+    cols = matrix_columns()
+    rows = matrix_rows(verdicts)
+    widths = {c: max(len(c), *(len(str(r[c])) for r in rows))
+              for c in cols}
+    lines = ["  ".join(c.ljust(widths[c]) for c in cols),
+             "  ".join("-" * widths[c] for c in cols)]
+    for r in rows:
+        lines.append("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+    return "\n".join(lines)

@@ -117,7 +117,7 @@ def summarize_ensemble(name: str, n_threads: int, s) -> BenchResult:
 
 def bench_lock(name: str, n_threads: int, *, n_steps: int = 20_000,
                ncs_max: int = 0, cs_shared: bool = True,
-               cost=CostModel(n_nodes=2),
+               cost=CostModel(n_nodes=2),  # noqa: B008
                n_replicas: int = 4, seed0: int = 0,
                builder=None) -> BenchResult:
     """Bench one lock — a thin wrapper over the ``SimEngine`` session API

@@ -66,7 +66,7 @@ class RunResult:
     def unfairness(self) -> float:
         """max/min episodes over threads (paper §9.2: <= 2x for
         reciprocating under sustained contention)."""
-        eps = [e for e in self.episodes.values()]
+        eps = list(self.episodes.values())
         lo = min(eps)
         return float("inf") if lo == 0 else max(eps) / lo
 

@@ -540,7 +540,8 @@ def machine_step(s: MachineState, prog: Program, cm, n_threads: int,
 
 
 def run_machine(prog: Program, n_threads: int, n_steps: int,
-                cm=CostModel(), seed: int = 0, sched=None) -> MachineState:
+                cm=CostModel(), seed: int = 0,  # noqa: B008
+                sched=None) -> MachineState:
     """One replica. ``cm``: flat ``CostModel``, ``topology.Topology``, or
     ``LoweredCost``; ``sched``: ``None``, ``sched.Scheduler``, or
     ``LoweredSched`` — both lowered once, outside the scan."""
@@ -556,7 +557,8 @@ def run_machine(prog: Program, n_threads: int, n_steps: int,
 
 
 def run_ensemble(prog: Program, n_threads: int, n_steps: int,
-                 cm=CostModel(), n_replicas: int = 8, seed0: int = 0):
+                 cm=CostModel(), n_replicas: int = 8,  # noqa: B008
+                 seed0: int = 0):
     """Deprecated: forward to ``core.sim.engine.SimEngine(...).states``,
     the one session API (same stacked-``MachineState`` return)."""
     import warnings

@@ -45,6 +45,7 @@ prints the catalogue); :func:`resolve` also accepts ``fair:QxR`` /
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from dataclasses import dataclass
 
@@ -147,7 +148,7 @@ def resolve(s) -> Scheduler:
     if s in PRESETS:
         return PRESETS[s]
     kind, _, arg = s.partition(":")
-    try:
+    with contextlib.suppress(ValueError):
         if kind == "fair":
             q, _, r = arg.partition("x")
             return Scheduler(s, quantum=int(q or 2500),
@@ -156,8 +157,6 @@ def resolve(s) -> Scheduler:
             q, lq, r = arg.split("x")
             return Scheduler(s, quantum=int(q), lhp_quantum=int(lq),
                              oversub=float(r))
-    except ValueError:
-        pass
     raise KeyError(
         f"unknown scheduler {s!r}; presets: {sorted(PRESETS)}; "
         "shorthand: fair:QxR, lhp:QxLxR")

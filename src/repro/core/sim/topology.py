@@ -41,6 +41,7 @@ real-machine profiles in :data:`PRESETS` (``python -m repro.bench list
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field, replace
 
 import numpy as np
@@ -252,7 +253,7 @@ def resolve(t) -> Topology:
     if t in PRESETS:
         return PRESETS[t]
     kind, _, arg = t.partition(":")
-    try:
+    with contextlib.suppress(ValueError):
         if kind == "smp":
             return smp(int(arg or 8))
         if kind == "numa":
@@ -263,8 +264,6 @@ def resolve(t) -> Topology:
                 return ccx()
             s, c, p = arg.split("x")
             return ccx(int(s), int(c), int(p))
-    except ValueError:
-        pass
     raise KeyError(
         f"unknown topology {t!r}; presets: {sorted(PRESETS)}; shorthand: "
         "smp:N, numa:KxP, ccx[:SxCxP]")

@@ -193,7 +193,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
         t0 = time.time()
         rates = []
         for Ls in (L1, L2):
-            kw = dict(n_layers=Ls, scan_layers=False)
+            kw = {"n_layers": Ls, "scan_layers": False}
             if cfg.is_encoder_decoder:
                 kw["n_enc_layers"] = Ls
             c = cfg.replace(**kw)

@@ -90,13 +90,14 @@ def train_state_shardings(cfg: ModelConfig, ctx: MeshCtx):
 
 
 def init_train_state(cfg: ModelConfig, ctx: MeshCtx, key,
-                     oc: OptConfig = OptConfig()):
+                     oc: OptConfig = OptConfig()):  # noqa: B008
     params = M_.init_params(cfg, key, ctx.model_size)
     return {"params": params,
             "opt": init_opt_state(params, oc.master_fp32)}
 
 
-def make_train_step(cfg: ModelConfig, ctx: MeshCtx, oc: OptConfig = OptConfig()):
+def make_train_step(cfg: ModelConfig, ctx: MeshCtx,
+                    oc: OptConfig = OptConfig()):  # noqa: B008
     def train_step(state, batch):
         def lf(params):
             return M_.loss_fn(params, batch, cfg, ctx)

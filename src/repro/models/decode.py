@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import (
-    decode_attention, moe_decode, mlp_swiglu, rope, rmsnorm,
+    decode_attention, moe_decode, mlp_swiglu, rope, rmsnorm, tree_index,
 )
 from repro.models.model import (
     F32, cs, embed_tokens, mlp_forward, scan_or_unroll, unembed_matrix,
@@ -251,9 +251,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: MeshCtx):
         else:   # unrolled: python layer index -> static shared-attn branch
             carry, ys = carry0, []
             for i in range(cfg.n_layers):
-                xs_i = jax.tree.map(lambda a: a[i],
-                                    (params["layers"], cache["state"],
-                                     cache["conv"]))
+                xs_i = tree_index((params["layers"], cache["state"],
+                                   cache["conv"]), i)
                 carry, y = step(carry, (i,) + xs_i)
                 ys.append(y)
             (x, ak, av) = carry

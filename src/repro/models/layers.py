@@ -33,6 +33,12 @@ F32 = jnp.float32
 NEG_INF = -1e30
 
 
+def tree_index(tree, i):
+    """Slice every leaf of a pytree at index ``i`` along axis 0 (binds
+    ``i`` eagerly, safe inside python loops)."""
+    return jax.tree.map(lambda a: a[i], tree)
+
+
 def scan_or_unroll(step, carry, xs, *, scan: bool, length: int | None = None):
     """lax.scan, or an unrolled python loop (dry-run mode, so XLA's cost
     analysis sees every iteration — while-loop bodies are counted once)."""
@@ -41,13 +47,11 @@ def scan_or_unroll(step, carry, xs, *, scan: bool, length: int | None = None):
     n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(n):
-        x_i = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        x_i = None if xs is None else tree_index(xs, i)
         carry, y = step(carry, x_i)
         ys.append(y)
-    if ys and jax.tree.leaves(ys[0]):
-        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
-    else:
-        ys = None
+    ys = (jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+          if ys and jax.tree.leaves(ys[0]) else None)
     return carry, ys
 
 

@@ -17,8 +17,8 @@ from repro.configs.base import ModelConfig
 from repro.models import params as P_
 from repro.models import specs as S_
 from repro.models.layers import (
-    F32, chunked_attention, mlp_gelu, mlp_swiglu,
-    moe_forward, rmsnorm, rope, scan_or_unroll, sinusoidal_pos,
+    F32, chunked_attention, mlp_gelu, mlp_swiglu, moe_forward,
+    rmsnorm, rope, scan_or_unroll, sinusoidal_pos, tree_index,
 )
 from repro.models.ssm import mamba2_mixer
 from repro.sharding.ctx import MeshCtx, constrain as cs
@@ -231,7 +231,8 @@ def _scan_layers(x, layers_p, cfg, ctx, positions, shared_p=None,
                 return y
             pred = i % cfg.shared_attn_every == 0
             if isinstance(pred, bool):            # unrolled: static branch
-                x = with_attn(x) if pred else x
+                if pred:
+                    x = with_attn(x)
             else:
                 x = jax.lax.cond(pred, with_attn, lambda x: x, x)
         x, a, kv = decoder_layer(x, lp, cfg, ctx, positions,
@@ -246,7 +247,7 @@ def _scan_layers(x, layers_p, cfg, ctx, positions, shared_p=None,
     # unrolled (dry-run): python layer index -> conds resolve statically
     carry, kv_list = (x, jnp.zeros((), F32)), []
     for i in range(n_scan):
-        lp = jax.tree.map(lambda a: a[i], layers_p)
+        lp = tree_index(layers_p, i)
         carry, kv = step_fn(carry, (i, lp))
         kv_list.append(kv)
     x, aux = carry

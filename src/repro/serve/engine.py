@@ -82,10 +82,10 @@ class EngineCounters:
     prefill_tokens: int = 0
 
     def to_dict(self) -> dict:
-        return dict(decode_batches=self.decode_batches,
-                    slot_steps=self.slot_steps,
-                    prefill_calls=self.prefill_calls,
-                    prefill_tokens=self.prefill_tokens)
+        return {"decode_batches": self.decode_batches,
+                "slot_steps": self.slot_steps,
+                "prefill_calls": self.prefill_calls,
+                "prefill_tokens": self.prefill_tokens}
 
 
 class _ModelExecutor(Executor):

@@ -56,8 +56,9 @@ class PoolStats:
     exhausted: int = 0
 
     def to_dict(self) -> dict:
-        return dict(allocs=self.allocs, evictions=self.evictions,
-                    shared_hits=self.shared_hits, exhausted=self.exhausted)
+        return {"allocs": self.allocs, "evictions": self.evictions,
+                "shared_hits": self.shared_hits,
+                "exhausted": self.exhausted}
 
 
 class PagedKVPool:

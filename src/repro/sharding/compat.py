@@ -11,6 +11,7 @@ model/train code is insulated from the move.
 """
 from __future__ import annotations
 
+import contextlib
 import inspect
 
 try:                                    # newest: top-level export
@@ -39,12 +40,10 @@ def make_mesh(shape, axis_names):
     equivalent there.
     """
     import jax
-    try:
+    with contextlib.suppress(AttributeError, TypeError):
         return jax.make_mesh(
             shape, axis_names,
             axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
-    except (AttributeError, TypeError):
-        pass
     try:        # jax >= 0.4.35, no AxisType yet
         return jax.make_mesh(shape, axis_names)
     except AttributeError:   # older still: build the Mesh by hand

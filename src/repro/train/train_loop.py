@@ -36,7 +36,7 @@ class RunConfig:
 
 def train(cfg: ModelConfig, ctx: MeshCtx, run: RunConfig,
           data_cfg: DataConfig | None = None,
-          oc: OptConfig = OptConfig()) -> dict:
+          oc: OptConfig = OptConfig()) -> dict:  # noqa: B008
     data_cfg = data_cfg or DataConfig(
         vocab_size=cfg.vocab_size, seq_len=64, global_batch=2)
     pipeline = DataPipeline(data_cfg).start()

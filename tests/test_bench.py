@@ -89,6 +89,17 @@ def test_cli_list_programs_and_suites(capsys):
     assert "locks-ext" in out
 
 
+def test_cli_list_properties_matrix(capsys):
+    # structural-only verified-property matrix (no model check => fast)
+    assert cli_main(["list", "--properties"]) == 0
+    out = capsys.readouterr().out
+    assert "model_check" in out
+    for name in PROGRAMS:
+        assert name in out
+    assert "✓ own cell" in out          # reciprocating's spin column
+    assert "✗ declared shared" in out   # ticket's declared opt-out
+
+
 def test_locks_ext_suite_tiny():
     doc = run_suite("locks-ext", TINY)
     assert validate_result(doc) == []

@@ -83,12 +83,13 @@ PINNED = [
 ]
 
 if HAVE_HYPOTHESIS:
-    _hostile_cases = lambda f: settings(max_examples=6, deadline=None)(
-        given(seed=st.integers(0, 10_000),
-              quantum=st.integers(300, 6000),
-              oversub=st.sampled_from([1.0, 2.0, 4.0]),
-              lhp=st.none() | st.integers(150, 1500),
-              jitter=st.integers(0, 800))(f))
+    def _hostile_cases(f):
+        return settings(max_examples=6, deadline=None)(
+            given(seed=st.integers(0, 10_000),
+                  quantum=st.integers(300, 6000),
+                  oversub=st.sampled_from([1.0, 2.0, 4.0]),
+                  lhp=st.none() | st.integers(150, 1500),
+                  jitter=st.integers(0, 800))(f))
 else:
     _hostile_cases = pytest.mark.parametrize(
         "seed,quantum,oversub,lhp,jitter", PINNED)

@@ -78,8 +78,9 @@ def test_flash_attention_grad_matches_ref():
 
 
 if HAVE_HYPOTHESIS:
-    _serp_cases = lambda f: settings(max_examples=10, deadline=None)(
-        given(nq=st.integers(1, 40), nkv=st.integers(1, 40))(f))
+    def _serp_cases(f):
+        return settings(max_examples=10, deadline=None)(
+            given(nq=st.integers(1, 40), nkv=st.integers(1, 40))(f))
 else:
     _serp_cases = pytest.mark.parametrize(
         "nq,nkv", [(1, 1), (1, 40), (40, 1), (2, 2), (32, 8), (40, 40)])
@@ -149,8 +150,9 @@ def test_ssd_oracle_matches_sequential():
 
 
 if HAVE_HYPOTHESIS:
-    _chunk_cases = lambda f: settings(max_examples=8, deadline=None)(
-        given(chunk=st.sampled_from([16, 32, 64, 128]))(f))
+    def _chunk_cases(f):
+        return settings(max_examples=8, deadline=None)(
+            given(chunk=st.sampled_from([16, 32, 64, 128]))(f))
 else:
     _chunk_cases = pytest.mark.parametrize("chunk", [16, 32, 64, 128])
 

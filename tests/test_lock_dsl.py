@@ -54,9 +54,9 @@ def _run(prog, T, steps, seed, n_nodes=1):
 def test_spec_identical_to_seed_tables(name):
     """Pinned-seed 2-thread sweep over the CS profiles, plus a contended
     6-thread NUMA cell: state-for-state equality with the pre-DSL zoo."""
-    cases = [(2, dict(cs_shared=True)), (2, dict(cs_shared=False)),
-             (2, dict(cs_shared="ro", ncs_max=60)), (2, dict(ncs_max=120)),
-             (6, dict(cs_shared=False))]
+    cases = [(2, {"cs_shared": True}), (2, {"cs_shared": False}),
+             (2, {"cs_shared": "ro", "ncs_max": 60}),
+             (2, {"ncs_max": 120}), (6, {"cs_shared": False})]
     for T, kw in cases:
         legacy = LEGACY_PROGRAMS[name](T, **kw)
         spec = PROGRAMS[name](T, **kw)
@@ -181,16 +181,38 @@ def test_fissile_fast_path_and_barging():
 
 
 def test_spin_then_park_cost_hooks_measurable():
-    """The CostModel park/unpark hooks change what the machine measures:
-    dearer unpark lengthens acquire latency and, once it exceeds the
-    release-path overlap, drops throughput."""
-    free = bench_lock("spin_then_park", 8, n_steps=12_000, n_replicas=2,
-                      cost=CostModel(n_nodes=1, park_cost=0, unpark_cost=0))
-    dear = bench_lock("spin_then_park", 8, n_steps=12_000, n_replicas=2,
+    """The CostModel park/unpark hooks change what the machine measures,
+    in the directions the PARK_EQ contract (machine.py table) pins down:
+    park and unpark are *private* time — the park charge accrues to the
+    sleeper when it blocks and the unpark syscall to the waker's own
+    timeline after the waking store — so dearer hooks never slow the
+    bus-time handoff itself. What they do is delay the waker's
+    *re-arrival*, thinning the queue: mean arrive->admit latency drops
+    and bus-time throughput does not degrade. At T=2 the handoff beats
+    the spin budget, the park path never engages, and the hooks are
+    exactly inert (bit-identical metrics)."""
+    kw = {"n_steps": 12_000, "n_replicas": 2}
+    free = bench_lock("spin_then_park", 8,
+                      cost=CostModel(n_nodes=1, park_cost=0, unpark_cost=0),
+                      **kw)
+    dear = bench_lock("spin_then_park", 8,
                       cost=CostModel(n_nodes=1, park_cost=25,
-                                     unpark_cost=300))
-    assert dear.latency > free.latency * 1.2
-    assert dear.throughput < free.throughput * 0.9
+                                     unpark_cost=300), **kw)
+    # hooks are live: the parked equilibrium shifts measurably...
+    assert dear.latency < free.latency * 0.95
+    # ...but private time never shows up on the bus-time denominator
+    assert dear.throughput > free.throughput * 0.95
+    assert dear.episodes >= free.episodes
+    # T=2: waits shorter than the probe budget -> no thread ever parks,
+    # so the very same hooks are inert
+    f2 = bench_lock("spin_then_park", 2,
+                    cost=CostModel(n_nodes=1, park_cost=0, unpark_cost=0),
+                    **kw)
+    d2 = bench_lock("spin_then_park", 2,
+                    cost=CostModel(n_nodes=1, park_cost=25,
+                                   unpark_cost=300), **kw)
+    assert (d2.episodes, d2.latency, d2.throughput) == \
+        (f2.episodes, f2.latency, f2.throughput)
 
 
 # --- DSL quality: compile-time errors and introspection ----------------------

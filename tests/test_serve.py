@@ -110,7 +110,7 @@ def test_engine_matches_reference(smoke_lm, mode):
     cfg, params = smoke_lm
     prompt = np.random.default_rng(7).integers(1, 97, 11, dtype=np.int32)
     ref = _reference_greedy(cfg, params, prompt, 6)
-    kw = dict(max_batch=2, max_seq=64, block_size=8)
+    kw = {"max_batch": 2, "max_seq": 64, "block_size": 8}
     if mode == "paged_chunked":
         kw["prefill_chunk"] = 4              # prefill rides the decode loop
     if mode == "dense":

@@ -144,9 +144,8 @@ def test_step_guard():
     from repro.train.fault_tolerance import StepGuard
     with StepGuard(5.0):
         pass                                 # fast step: fine
-    with pytest.raises(StepGuard.Hang):
-        with StepGuard(0.05):
-            time.sleep(0.2)
+    with pytest.raises(StepGuard.Hang), StepGuard(0.05):
+        time.sleep(0.2)
 
 
 def test_restart_policy_backoff():
@@ -180,9 +179,10 @@ def test_compressed_allreduce_error_feedback():
 # elastic MoE relayout
 # ---------------------------------------------------------------------------
 if HAVE_HYPOTHESIS:
-    _relayout_cases = lambda f: settings(max_examples=10, deadline=None)(
-        given(m1=st.sampled_from([1, 2, 4, 8, 16]),
-              m2=st.sampled_from([1, 2, 4, 8, 16]))(f))
+    def _relayout_cases(f):
+        return settings(max_examples=10, deadline=None)(
+            given(m1=st.sampled_from([1, 2, 4, 8, 16]),
+                  m2=st.sampled_from([1, 2, 4, 8, 16]))(f))
 else:
     _relayout_cases = pytest.mark.parametrize(
         "m1,m2", [(1, 2), (2, 4), (4, 8), (8, 16), (16, 1), (4, 4)])

@@ -100,8 +100,8 @@ def test_sharded_grid_bit_identical(lock):
     shard=False (plain vmap) over the full 2-topology x 2-scheduler
     grid: every cell bit-identical on pinned seeds."""
     eng = SimEngine(lock, n_threads=4, workload=WL)
-    kw = dict(seeds=SEEDS, topologies=list(DIFF_TOPOLOGIES),
-              schedulers=list(DIFF_SCHEDULERS))
+    kw = {"seeds": SEEDS, "topologies": list(DIFF_TOPOLOGIES),
+          "schedulers": list(DIFF_SCHEDULERS)}
     g0 = eng.grid(**kw, shard=False)
     g1 = eng.grid(**kw, shard=True)
     assert len(g0.cells) == len(g1.cells) == 4
@@ -159,9 +159,9 @@ def test_sharded_multi_device_bit_identical():
 # --- cached vs fresh ---------------------------------------------------------
 
 def test_cached_grid_warm_equals_fresh(own_cache):
-    kw = dict(seeds=SEEDS,
-              topologies=[CostModel(n_nodes=1), CostModel(n_nodes=2)],
-              workloads=[WL], threads=[4])
+    kw = {"seeds": SEEDS,
+          "topologies": [CostModel(n_nodes=1), CostModel(n_nodes=2)],
+          "workloads": [WL], "threads": [4]}
     cold = sweep.cached_grid("reciprocating", **kw)
     assert own_cache.stats.misses == len(cold.cells)
     assert own_cache.stats.stores == len(cold.cells)
@@ -190,9 +190,9 @@ def test_bench_cell_cached_equality(own_cache):
 def test_partial_hit_reruns_whole_grid(own_cache):
     """Losing one cell's entry degrades to a full (one-jit) grid rerun
     that re-stores every cell — never a partial mixed-source grid."""
-    kw = dict(seeds=SEEDS,
-              topologies=[CostModel(n_nodes=1), CostModel(n_nodes=2)],
-              workloads=[WL], threads=[4])
+    kw = {"seeds": SEEDS,
+          "topologies": [CostModel(n_nodes=1), CostModel(n_nodes=2)],
+          "workloads": [WL], "threads": [4]}
     sweep.cached_grid("ticket", **kw)
     # evict one of the two entries
     victims = [os.path.join(dp, f) for dp, _, fs in
@@ -211,7 +211,7 @@ def test_partial_hit_reruns_whole_grid(own_cache):
 
 def test_disabled_cache_bypasses_store(own_cache):
     own_cache.enabled = False
-    kw = dict(seeds=(0,), workloads=[WL], threads=[2])
+    kw = {"seeds": (0,), "workloads": [WL], "threads": [2]}
     sweep.cached_grid("mcs", **kw)
     assert own_cache.stats.snapshot() == {"hits": 0, "misses": 0,
                                           "stores": 0}
@@ -220,7 +220,7 @@ def test_disabled_cache_bypasses_store(own_cache):
 
 def test_no_read_still_stores(own_cache):
     """--no-cache semantics: lookups off, the store stays fresh."""
-    kw = dict(seeds=(0,), workloads=[WL], threads=[2])
+    kw = {"seeds": (0,), "workloads": [WL], "threads": [2]}
     sweep.cached_grid("clh", **kw)
     own_cache.read = False
     h0 = own_cache.stats.hits
@@ -235,7 +235,8 @@ def test_no_read_still_stores(own_cache):
 # --- the cache key is semantic -----------------------------------------------
 
 def _cell_key(lock="mcs", T=4, ncs=0, cs=True, n_steps=500,
-              topology=CostModel(), sched="dedicated", seeds=(0, 1),
+              topology=CostModel(), sched="dedicated",  # noqa: B008
+              seeds=(0, 1),
               wl_label=""):
     eng = SimEngine(lock, n_threads=T)
     wl = Workload(ncs, cs, n_steps, label=wl_label)

@@ -1,0 +1,297 @@
+"""Mutant-spec regression corpus for the static verifier.
+
+Each mutant hand-breaks exactly one paper property of a known-good lock
+spec; the tests assert the *specific* analyzer pass catches it — the CFG
+gate (``core/locks/cfg.py``) for shape violations, the exhaustive
+small-scope model checker (``core/locks/verify.py``) for interleaving
+violations — and that the error carries useful provenance (phase/label
+for structural findings, a minimal counterexample trace for model-check
+findings). Positive controls pin the structural facts of the real zoo
+to the paper's comparison table.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.bench import report
+from repro.bench.cli import main as cli_main
+from repro.core.locks import cfg, specs, verify
+from repro.core.locks.compile import compile_spec
+from repro.core.locks.dsl import (
+    CAS, FAA, NCS, NOP, SPIN_EQ, STORE, XCHG, SpecError,
+)
+
+
+# ---------------------------------------------------------------------------
+# Positive controls: the zoo's structural facts match the paper table
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,doorway,release,spin,footprint", [
+    ("reciprocating", "constant", "wait_free", "own", 1),
+    ("ticket", "constant", "wait_free", "shared", 0),
+    ("mcs", "constant", "waits", "own", 2),
+    ("clh", "constant", "wait_free", "cell", 1),
+    ("ttas", "none", "wait_free", "shared", 0),
+    ("reciprocating_abortable", "constant", "unbounded", "cell", 0),
+])
+def test_structural_facts_match_paper_table(name, doorway, release, spin,
+                                            footprint):
+    facts = cfg.analyze(specs.SPECS[name], 4, name)
+    assert facts.doorway_grade == doorway
+    assert facts.release_grade == release
+    assert facts.spin_level == spin
+    assert facts.footprint == footprint
+    assert cfg.check_spec(facts) == []
+
+
+def test_reciprocating_doorway_is_two_ops():
+    facts = cfg.analyze(specs.SPECS["reciprocating"], 4, "reciprocating")
+    assert facts.doorway.loop_free
+    assert facts.doorway.bound == 2
+
+
+# ---------------------------------------------------------------------------
+# Mutant: remote spin cell (declared own, actually a dynamic/shared cell)
+# ---------------------------------------------------------------------------
+def _anderson_claims_own(s):
+    specs.anderson(s)
+    s.expect(spin="own")        # BUG: anderson spins on a *rotating* slot
+
+
+def _ticket_claims_own(s):
+    specs.ticket(s)
+    s.expect(spin="own")        # BUG: ticket spins on the shared grant word
+
+
+def test_mutant_remote_spin_cell_caught():
+    with pytest.raises(SpecError) as ei:
+        compile_spec(_anderson_claims_own, 4, name="anderson_claims_own")
+    msg = str(ei.value)
+    assert "anderson_claims_own" in msg          # lock-name provenance
+    assert "declared spin='own' but analysis proves 'cell'" in msg
+
+
+def test_mutant_shared_spin_declared_local_caught():
+    with pytest.raises(SpecError) as ei:
+        compile_spec(_ticket_claims_own, 4, name="ticket_claims_own")
+    msg = str(ei.value)
+    assert "declared spin='own' but analysis proves 'shared'" in msg
+    assert "SPIN_EQ" in msg                      # the culprit op is named
+
+
+# ---------------------------------------------------------------------------
+# Mutant: loop in the doorway (undeclared -> safety-floor SpecError)
+# ---------------------------------------------------------------------------
+def _doorway_loop(s):
+    tk, gr = s.word("ticket"), s.word("grant")
+    s.regs("my")
+
+    @s.step("doorway")
+    def take(c):
+        return c.op(FAA(tk, 1))
+
+    @s.step("doorway")
+    def got(c):
+        c.r.my = c.res
+        unlucky = (c.res % 7) == 3
+        return c.when(unlucky, c.op(NOP(), to="take"),   # BUG: doorway loop
+                      c.op(SPIN_EQ(gr, c.res), arrive=True))
+
+    @s.step("entry")
+    def granted(c):
+        return c.enter_cs(admit=True)
+
+    @s.step("release")
+    def bump(c):
+        return c.op(FAA(gr, 1), to=NCS)
+
+
+def test_mutant_doorway_loop_caught():
+    with pytest.raises(SpecError) as ei:
+        compile_spec(_doorway_loop, 4, name="doorway_loop")
+    msg = str(ei.value)
+    assert "doorway phase has a loop" in msg
+    assert "take" in msg and "got" in msg        # the cycle is spelled out
+    assert 'doorway="unbounded"' in msg          # ... and the opt-out hint
+
+
+# ---------------------------------------------------------------------------
+# Mutant: second waiting element (footprint understated)
+# ---------------------------------------------------------------------------
+def _mcs_understated(s):
+    specs.mcs(s)
+    s.expect(footprint=1)       # BUG: mcs nodes are two per-thread words
+
+
+def test_mutant_second_waiting_element_caught():
+    with pytest.raises(SpecError) as ei:
+        compile_spec(_mcs_understated, 4, name="mcs_understated")
+    msg = str(ei.value)
+    assert ("declared footprint=1 but the spec touches 2 "
+            "sequestered per-thread word(s)") in msg
+
+
+# ---------------------------------------------------------------------------
+# Stale declaration (two-sided check): claiming *weaker* than proven
+# ---------------------------------------------------------------------------
+def _mcs_stale_release(s):
+    specs.mcs(s)
+    s.expect(release="wait_free")   # stale: the handoff CAS path waits
+
+
+def test_stale_declaration_is_an_error_too():
+    with pytest.raises(SpecError) as ei:
+        compile_spec(_mcs_stale_release, 4, name="mcs_stale_release")
+    msg = str(ei.value)
+    assert "declared release='wait_free' but analysis proves 'waits'" in msg
+    assert "cas_done" in msg                     # step-label provenance
+
+
+# ---------------------------------------------------------------------------
+# Mutant: dropped wakeup (release never clears the flag)
+# ---------------------------------------------------------------------------
+def _ttas_dropped_wakeup(s):
+    flag = s.word("flag")
+
+    @s.step("waiting")
+    def wait_free(c):
+        return c.op(SPIN_EQ(flag, 0), arrive=True)
+
+    @s.step("entry")
+    def grab(c):
+        return c.op(XCHG(flag, 1))
+
+    @s.step("entry")
+    def check(c):
+        got = c.res == 0
+        return c.when(got, c.enter_cs(admit=True),
+                      c.op(SPIN_EQ(flag, 0), to="grab"))
+
+    @s.step("release")
+    def unlock(c):
+        return c.op(STORE(flag, 1), to=NCS)      # BUG: leaves the lock held
+
+
+def test_mutant_dropped_wakeup_caught():
+    r = verify.model_check(_ttas_dropped_wakeup, 2, episodes=1,
+                           name="ttas_dropped_wakeup")
+    assert not r.ok
+    assert r.violation in ("deadlock", "lost_wakeup")
+    assert "SPIN_EQ(flag" in r.detail            # who is stuck, and where
+    assert r.trace                               # minimal counterexample
+    assert any("STORE(flag, 1)" in step for step in r.trace)
+
+
+# ---------------------------------------------------------------------------
+# Mutant: mutual-exclusion hole (admits on a *failed* CAS)
+# ---------------------------------------------------------------------------
+def _cas_admits_loser(s):
+    flag = s.word("flag")
+
+    @s.step("entry")
+    def grab(c):
+        return c.op(CAS(flag, 0, 1))
+
+    @s.step("entry")
+    def admitted(c):
+        return c.enter_cs(admit=True)            # BUG: ignores the CAS result
+
+    @s.step("release")
+    def unlock(c):
+        return c.op(STORE(flag, 0), to=NCS)
+
+
+def test_mutant_mutual_exclusion_hole_caught():
+    r = verify.model_check(_cas_admits_loser, 2, episodes=1,
+                           name="cas_admits_loser")
+    assert not r.ok
+    assert r.violation == "mutual_exclusion"
+    assert "pending CS access together" in r.detail
+    assert any("CAS(flag" in step for step in r.trace)
+
+
+# ---------------------------------------------------------------------------
+# Mutant: FIFO violation (a barging lock declaring a bypass bound)
+# ---------------------------------------------------------------------------
+def _ttas_claims_fifo(s):
+    specs.ttas(s)
+    s.expect(bypass=1)          # BUG: ttas barges without bound
+
+
+def test_mutant_fifo_violation_caught():
+    v = verify.verify_lock(_ttas_claims_fifo, "ttas_claims_fifo")
+    assert not v.ok
+    assert v.structural_violations == []         # shape is fine ...
+    assert v.check is not None and v.check.violation == "bypass"
+    assert "declared bound 1" in v.check.detail  # ... the interleaving isn't
+    assert v.check.trace
+
+
+# ---------------------------------------------------------------------------
+# Positive controls: the model checker certifies the real zoo
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["ticket", "ttas", "reciprocating"])
+def test_model_check_certifies_real_locks(name):
+    r = verify.model_check(specs.SPECS[name], 2, episodes=2, name=name)
+    assert r.ok and r.closed
+    assert "exhaustive" in r.certificate
+
+
+def test_reciprocating_respects_paper_bypass_bound():
+    r = verify.model_check(specs.SPECS["reciprocating"], 2, episodes=2,
+                           name="reciprocating", bypass_bound=2)
+    assert r.ok
+    assert r.max_bypass <= 2
+
+
+# ---------------------------------------------------------------------------
+# Expectation-schema validation
+# ---------------------------------------------------------------------------
+def test_expect_rejects_unknown_key():
+    with pytest.raises(SpecError, match="unknown expectation"):
+        cfg.validate_expectations({"fairness": 1}, "x")
+
+
+def test_expect_rejects_bad_value():
+    with pytest.raises(SpecError, match="spin= must be one of"):
+        cfg.validate_expectations({"spin": "local"}, "x")
+
+
+def test_verify_all_rejects_unknown_lock():
+    with pytest.raises(KeyError, match="unknown lock"):
+        verify.verify_all(names=("nope",))
+
+
+# ---------------------------------------------------------------------------
+# Matrix rendering + RESULTS.md splicing
+# ---------------------------------------------------------------------------
+def test_matrix_structural_render():
+    vs = verify.verify_all(names=("reciprocating", "ttas"), model=False)
+    txt = verify.render_matrix(vs)
+    assert "reciprocating" in txt and "own cell" in txt
+    rows = verify.matrix_rows(vs)
+    by = {r["lock"]: r for r in rows}
+    # structural-only runs show the declaration, flagged as unproven
+    assert by["reciprocating"]["bypass"].startswith("declared ≤2")
+    assert by["ttas"]["bypass"] == "✗ declared unbounded"
+
+
+def test_splice_section_roundtrip(tmp_path):
+    p = str(tmp_path / "R.md")
+    report.splice_section(p, report.VERIFY_HEADER, ["row-one"])
+    report.splice_section(p, "## Other", ["keep-me"])
+    report.splice_section(p, report.VERIFY_HEADER, ["row-new"])
+    text = (tmp_path / "R.md").read_text()
+    assert text.count(report.VERIFY_HEADER) == 1
+    assert "row-new" in text and "row-one" not in text
+    assert "## Other" in text and "keep-me" in text
+
+
+# ---------------------------------------------------------------------------
+# CLI surfaces
+# ---------------------------------------------------------------------------
+def test_cli_verify_subset(capsys):
+    assert cli_main(["verify", "--lock", "ticket", "--no-results",
+                     "--no-progress"]) == 0
+    out = capsys.readouterr().out
+    assert "ticket" in out
+    assert "exhaustive" in out
