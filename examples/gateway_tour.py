@@ -1,0 +1,67 @@
+"""Fleet-gateway tour: four replicas, five routers, one tenant trace.
+
+Walks the fleet tier of SERVING.md §8 end to end:
+
+1. generate a seeded multi-tenant trace (Zipf tenants with shared
+   system prompts, Poisson bursts, heavy-tailed decode lengths);
+2. drive it through a 4-replica fleet under every routing policy;
+3. compare global cache-hit rate, TTFT, load imbalance and goodput —
+   and watch the radix prefix tree / eviction-coherence machinery work.
+
+Run:  PYTHONPATH=src python examples/gateway_tour.py
+"""
+import time
+
+from repro.serve.gateway import ROUTERS, FleetGateway
+from repro.serve.prefix_tree import RadixPrefixTree
+from repro.serve.traces import TraceSpec, generate
+
+N_REPLICAS = 4
+SPEC = TraceSpec(n_requests=6_000, n_tenants=96, burst_rate=0.1, seed=0)
+
+
+def tree_demo() -> None:
+    """The router's index in isolation: advertise, match, evict."""
+    print("=== the global radix prefix tree (serve/prefix_tree.py) ===")
+    tree = RadixPrefixTree(block_tokens=4)
+    prompt = list(range(12))            # 3 full blocks
+    ids = tree.insert(prompt, replica=0)
+    tree.insert(prompt[:8], replica=1)  # replica 1 holds 2 of the 3
+    print(f"advertised chain node ids {ids} -> "
+          f"match = {tree.match(prompt)}  (replica: depth in blocks)")
+    # replica 0's pool evicts block 1 -> it drops out of depths >= 2
+    tree.evict(ids[1], replica=0)
+    print(f"after replica 0 evicts block 1 -> match = {tree.match(prompt)}"
+          "  (runs must be contiguous from the root)")
+    print()
+
+
+def main() -> None:
+    tree_demo()
+    print(f"=== {SPEC.n_requests} requests, {SPEC.n_tenants} tenants, "
+          f"{N_REPLICAS} replicas x 8 slots ===")
+    print(f"{'router':14s} {'hit':>6s} {'mean_ttft':>9s} {'p99_ttft':>8s} "
+          f"{'imbal':>6s} {'goodput':>8s} {'tree':>5s} {'wall':>6s}")
+    rows = {}
+    for name in ROUTERS:
+        t0 = time.time()
+        gw = FleetGateway(n_replicas=N_REPLICAS, router=name,
+                          max_slots=8, pool_blocks=160, seed=1)
+        s = gw.run(generate(SPEC))
+        rows[name] = s
+        print(f"{name:14s} {s['hit_rate']:6.3f} {s['mean_ttft']:9.1f} "
+              f"{s['p99_ttft']:8.0f} {s['load_imbalance']:6.2f} "
+              f"{s['goodput_tok_per_step']:8.1f} {s['tree_nodes']:5d} "
+              f"{time.time() - t0:5.1f}s")
+    print()
+    p, r = rows["prefix"], rows["random"]
+    print(f"prefix vs random: hit {p['hit_rate']:.3f} vs {r['hit_rate']:.3f}, "
+          f"mean TTFT {p['mean_ttft']:.1f} vs {r['mean_ttft']:.1f} steps")
+    print("(`reciprocating` adds the paper's entry-segment dispatch on "
+          "top of the\n prefix-aware targets — bursts drain newest-first "
+          "with bounded bypass,\n while their tenant prefix is hottest; "
+          "see SERVING.md §8.)")
+
+
+if __name__ == "__main__":
+    main()

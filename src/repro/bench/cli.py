@@ -8,6 +8,8 @@ Commands:
                                   regions), ``--topologies`` the machine
                                   topology presets, ``--schedulers`` the
                                   hostile-OS scheduler presets,
+                                  ``--routers`` the fleet-gateway routing
+                                  policies (serve/gateway.py),
                                   ``--cache`` the experiment-cache state
                                   plus each suite's latest trend entry
                                   (wall time / hit rate from
@@ -121,12 +123,13 @@ def cmd_list(args) -> int:
     show_programs = getattr(args, "programs", False)
     show_topologies = getattr(args, "topologies", False)
     show_schedulers = getattr(args, "schedulers", False)
+    show_routers = getattr(args, "routers", False)
     show_cache = getattr(args, "cache", False)
     show_properties = getattr(args, "properties", False)
     show_suites = (getattr(args, "suites", False)
                    or not (show_programs or show_topologies
-                           or show_schedulers or show_cache
-                           or show_properties))
+                           or show_schedulers or show_routers
+                           or show_cache or show_properties))
     if show_suites:
         print("# suites")
         for name in registry.names():
@@ -167,6 +170,14 @@ def cmd_list(args) -> int:
             print(f"{name:12s} {summary}")
         print(f"{'':12s} pass presets/shorthand to "
               "SimEngine(scheduler=...) or .grid(schedulers=[...])")
+    if show_routers:
+        from repro.serve.gateway import catalogue
+        print("# fleet gateway routers (serve/gateway.py; targets are "
+              "always slack-bearing replicas — SERVING.md §8)")
+        for name, summary in catalogue():
+            print(f"{name:14s} {summary}")
+        print(f"{'':14s} pass names to FleetGateway(router=...) or the "
+              "gateway bench suite")
     if show_properties:
         from repro.core.locks import verify as verify_mod
         print("# verified/declared lock properties (structural analysis "
@@ -298,6 +309,9 @@ def build_parser() -> argparse.ArgumentParser:
     ls.add_argument("--schedulers", action="store_true",
                     help="enumerate the hostile-OS scheduler preset "
                          "catalogue (core/sim/sched.py)")
+    ls.add_argument("--routers", action="store_true",
+                    help="enumerate the fleet-gateway routing policy "
+                         "catalogue (serve/gateway.py)")
     ls.add_argument("--properties", action="store_true",
                     help="print the per-lock verified/declared property "
                          "matrix (structural analysis only; see `verify`)")

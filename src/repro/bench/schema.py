@@ -61,6 +61,16 @@ hostility ladder), and ``hostile_compile`` (scalars — the scheduler-axis
 compile accounting; CI asserts ``compiles_per_grid <= 1`` here as well,
 pinning that schedulers batch as stacked data).
 
+The ``gateway`` suite (docs/SERVING.md §8 fleet tier) stays inside the
+same kinds: ``gateway_routers`` (table — routing policies across
+fleet-level TTFT/TPOT/goodput, global cache-hit rate, load imbalance
+and live tree size on the seeded multi-tenant trace),
+``gateway_load`` (sweep over ``offered_load`` — the same metrics per
+router as the arrival rate rises), and ``gateway_scale`` (scalars —
+prefix vs random vs round_robin at 100k requests quick / 1M full,
+nesting one dict per router, with the O(requests) bookkeeping bound
+asserted inside the builder).
+
 Result documents additionally carry a ``"harness"`` block (written by
 ``registry.run_suite``): suite wall time, fresh XLA traces paid, and
 experiment-cache hit/miss/store counts for the run. The block is

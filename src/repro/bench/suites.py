@@ -771,6 +771,128 @@ def build_serve(cfg: BenchConfig) -> list:
     return exps
 
 
+GATEWAY_ROUTERS = ("round_robin", "random", "least_loaded", "prefix",
+                   "reciprocating")
+GATEWAY_METRICS = ("hit_rate", "mean_ttft", "p99_ttft", "mean_tpot",
+                   "goodput_tok_per_step", "load_imbalance", "mean_wait")
+#: Fleet shape shared by every gateway experiment: 8 replicas x 8 slots,
+#: per-replica pools sized so the tenant working set (~160 tenants x
+#: 4-12 shared blocks) fits the fleet aggregate but NOT one pool —
+#: the regime where routing decides the global hit rate (SERVING.md §8).
+GATEWAY_FLEET = {"n_replicas": 8, "max_slots": 8, "pool_blocks": 160,
+                 "block_tokens": 16, "prefill_cost_per_block": 1.0,
+                 "load_penalty": 4.0}
+
+
+def fleet_drive(router: str, *, n_req: int, seed: int = 0,
+                burst_rate: float = 0.2) -> dict:
+    """One trace-to-drain fleet run, fronted by the experiment cache: a
+    gateway drive is a pure function of (fleet shape, router, seeded
+    trace spec), so its summary is content-addressed exactly like a sim
+    grid cell (bench/cache.py) and warm paper re-runs replay it."""
+    import hashlib
+
+    from repro.bench import cache as cachemod
+    from repro.serve.gateway import FleetGateway
+    from repro.serve.traces import TraceSpec, generate
+
+    gw_kwargs = dict(GATEWAY_FLEET, router=router, seed=seed)
+    trace_kwargs = {"n_requests": n_req, "burst_rate": burst_rate,
+                    "seed": seed}
+    store = cachemod.get_cache()
+    key = hashlib.sha256(json.dumps(
+        {"v": cachemod.CACHE_KEY_VERSION, "kind": "fleet_drive",
+         "gw": gw_kwargs, "trace": trace_kwargs},
+        sort_keys=True).encode()).hexdigest()
+    s = store.get(key)
+    if s is None:
+        if store.enabled:
+            store.stats.misses += 1
+        t0 = time.time()
+        gw = FleetGateway(**gw_kwargs)
+        s = gw.run(generate(TraceSpec(**trace_kwargs)))
+        wall = time.time() - t0
+        s["wall_s"] = round(wall, 3)
+        s["req_per_s"] = round(n_req / max(wall, 1e-9), 1)
+        if store.enabled:
+            store.put(key, s)
+    elif store.enabled:
+        store.stats.hits += 1
+    # O(requests) bookkeeping bound (serve/core.py): every request costs
+    # exactly one arrival-heap pop and one slot retirement, regardless
+    # of trace length — the micro-assert that keeps million-request
+    # traces from going quadratic again.
+    assert s["bookkeeping_ops"] == 2 * n_req, (
+        f"bookkeeping ops {s['bookkeeping_ops']} != 2*{n_req}")
+    return s
+
+
+def build_gateway(cfg: BenchConfig) -> list:
+    """Fleet tier (SERVING.md §8): router comparison table, offered-load
+    sweep, and the at-scale prefix-vs-baselines run (100k requests
+    quick, 1M full)."""
+    seed = cfg.seed0
+    n_table = 10_000 if cfg.quick else 100_000
+    n_sweep = 4_000 if cfg.quick else 20_000
+    n_scale = 100_000 if cfg.quick else 1_000_000
+    rates = (0.12, 0.2) if cfg.quick else (0.1, 0.15, 0.2, 0.25)
+
+    rows = []
+    for router in GATEWAY_ROUTERS:
+        t0 = time.time()
+        s = fleet_drive(router, n_req=n_table, seed=seed)
+        rows.append({"router": router,
+                     **{k: round(float(s[k]), 4) for k in GATEWAY_METRICS},
+                     "tree_nodes": s["tree_nodes"]})
+        if cfg.verbose:
+            emit(f"gateway/{router}", (time.time() - t0) * 1e6 / n_table,
+                 f"hit={s['hit_rate']:.3f} ttft={s['mean_ttft']:.1f} "
+                 f"imb={s['load_imbalance']:.2f}")
+
+    series = []
+    for router in GATEWAY_ROUTERS:
+        pts = []
+        for rate in rates:
+            s = fleet_drive(router, n_req=n_sweep, seed=seed,
+                            burst_rate=rate)
+            pt = {"offered_load": round(rate * 7.0, 3)}
+            pt.update({k: round(float(s[k]), 4) for k in GATEWAY_METRICS})
+            pts.append(pt)
+        series.append({"label": router, "points": pts})
+
+    scale_routers = ("prefix", "random", "round_robin")
+    scale: dict = {"n_requests": n_scale}
+    for router in scale_routers:
+        t0 = time.time()
+        s = fleet_drive(router, n_req=n_scale, seed=seed)
+        scale[router] = {k: round(float(s[k]), 4) for k in GATEWAY_METRICS}
+        scale[router]["bookkeeping_ops"] = s["bookkeeping_ops"]
+        scale[router]["req_per_s"] = s["req_per_s"]
+        if cfg.verbose:
+            emit(f"gateway/scale_{router}",
+                 (time.time() - t0) * 1e6 / n_scale,
+                 f"n={n_scale} hit={s['hit_rate']:.3f} "
+                 f"ttft={s['mean_ttft']:.1f}")
+
+    return [
+        table_experiment(
+            "gateway_routers",
+            "Fleet gateway — routing policy comparison on the seeded "
+            "multi-tenant trace (8 replicas, global radix prefix tree)",
+            ["router"] + list(GATEWAY_METRICS) + ["tree_nodes"], rows),
+        sweep_experiment(
+            "gateway_load",
+            "Fleet gateway — TTFT / hit rate / goodput vs offered load "
+            "× router", "offered_load", series,
+            meta={"series_label": "router"}),
+        scalars_experiment(
+            "gateway_scale",
+            "Fleet gateway — prefix routing vs baselines at scale "
+            "(the >=100k-request trace; 1M on full runs) with the "
+            "O(requests) bookkeeping bound asserted", scale),
+    ]
+
+
 def build_kernels(cfg: BenchConfig) -> list:
     """Beyond-paper: serpentine-vs-ascending structural DMA accounting."""
     from repro.configs import get_config
@@ -920,6 +1042,12 @@ register("serve", "Serving engine (beyond paper, docs/SERVING.md)",
          "Policy × offered-load sweep on the unified continuous-batching "
          "core with the paged-KV pool, plus the model-backed engine "
          "smoke (full runs).")(build_serve)
+register("gateway", "Fleet serving gateway (beyond paper, "
+         "docs/SERVING.md §8)",
+         "Multi-replica gateway with prefix-aware routing over a global "
+         "radix prefix tree: router comparison table, offered-load "
+         "sweep, and the 100k/1M-request at-scale run with the "
+         "O(requests) bookkeeping bound asserted.")(build_gateway)
 register("kernels", "Serpentine kernel accounting (beyond paper)",
          "Structural KV-fetch savings of the serpentine flash-attention "
          "schedule.")(build_kernels)
@@ -938,8 +1066,8 @@ register("verify", "Verified lock properties (DESIGN.md §L2)",
           "throughput-vs-threads for every lock program, coherence "
           "traffic, fairness and bounded-bypass histograms — plus the "
           "beyond-paper extended lock zoo (locks-ext), machine-topology "
-          "(topology), hostile-OS scheduler (hostile) and serving "
-          "(docs/SERVING.md) sections.",
+          "(topology), hostile-OS scheduler (hostile), serving "
+          "(docs/SERVING.md) and fleet-gateway (SERVING.md §8) sections.",
           tags=("paper",))
 def build_paper(cfg: BenchConfig) -> list:
     exps = []
@@ -958,5 +1086,6 @@ def build_paper(cfg: BenchConfig) -> list:
     exps += build_hostile(cfg)
     exps += build_fairness(cfg)
     exps += build_serve(cfg)
+    exps += build_gateway(cfg)
     exps += build_verify(cfg)
     return exps

@@ -29,9 +29,18 @@ core retires the request and refills the slot the same step
 A request object must carry ``arrival`` / ``admitted`` / ``finished``
 floats (set to ``-1.0`` when unset); both ``serve.scheduler.Request`` and
 ``serve.engine.GenRequest`` do.
+
+Bookkeeping is amortized O(1) per request, not O(n) per step: pending
+requests sit in an arrival-ordered heap (each is pushed and popped
+exactly once, instead of the whole backlog being rescanned every step)
+and active requests live in an id-keyed dict (retiring one is a dict
+delete, not a ``list.remove`` identity scan). ``bookkeeping_ops`` counts
+those heap/dict touches so harnesses can assert the O(requests) bound on
+million-request traces (the gateway suite does — SERVING.md §8).
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 
 from repro.core.admission import POLICIES, AdmissionQueue
@@ -95,32 +104,51 @@ class ServeCore:
         self.queue: AdmissionQueue = POLICIES[policy](seed)
         self.policy = policy
         self.max_slots = max_slots
-        self.pending: list = []         # submitted, not yet arrived
-        self.active: list = []          # admitted, occupying a slot
+        self._pending: list = []        # heap of (arrival, seq, req)
+        self._seq = 0                   # heap tiebreak = submission order
+        self._active: dict = {}         # id(req) -> req (insertion order)
+        self.bookkeeping_ops = 0        # heap pops + slot retirements
         self.stats = ServeStats()
         self.time = 0.0
+
+    @property
+    def pending(self) -> list:
+        """Submitted-but-not-arrived requests in arrival order (a view —
+        the backing store is the arrival heap)."""
+        return [r for _, _, r in sorted(self._pending)]
+
+    @property
+    def active(self) -> list:
+        """Admitted requests in admission order (a view — the backing
+        store is the id-keyed slot dict)."""
+        return list(self._active.values())
+
+    @property
+    def backlog(self) -> int:
+        """Requests anywhere in this core (pending + queued + active) —
+        O(1), unlike the sorted ``pending`` view. The fleet gateway uses
+        this as the per-replica load signal (SERVING.md §8)."""
+        return len(self._pending) + len(self.queue) + len(self._active)
 
     def submit(self, req) -> None:
         """Requests become visible at ``req.arrival`` (O(1) doorway:
         arrival-stack push happens then, not now)."""
-        self.pending.append(req)
+        self._seq += 1
+        heapq.heappush(self._pending, (req.arrival, self._seq, req))
 
     def has_work(self) -> bool:
-        return bool(self.active or len(self.queue) or self.pending)
+        return bool(self._active or len(self.queue) or self._pending)
 
     def step(self) -> None:
         """One scheduler tick == one decode iteration for every slot:
         arrivals -> admissions into free slots -> one unit of work."""
         self.time += 1.0
-        still = []
-        for r in self.pending:
-            if r.arrival <= self.time:
-                self.executor.on_arrival(r, self.time)
-                self.queue.push(r)
-            else:
-                still.append(r)
-        self.pending = still
-        while len(self.active) < self.max_slots:
+        while self._pending and self._pending[0][0] <= self.time:
+            _, _, r = heapq.heappop(self._pending)
+            self.bookkeeping_ops += 1
+            self.executor.on_arrival(r, self.time)
+            self.queue.push(r)
+        while len(self._active) < self.max_slots:
             r = self.queue.pop()
             if r is None:
                 break
@@ -131,13 +159,15 @@ class ServeCore:
                 # never lose the request: it re-queues on the next step
                 # (the error still surfaces to the caller)
                 r.admitted = -1.0
-                self.pending.append(r)
+                self._seq += 1
+                heapq.heappush(self._pending, (self.time, self._seq, r))
                 raise
-            self.active.append(r)
-        for r in self.executor.work(self.active, self.time):
+            self._active[id(r)] = r
+        for r in self.executor.work(list(self._active.values()), self.time):
             r.finished = self.time
             self.executor.retire(r)
-            self.active.remove(r)
+            del self._active[id(r)]
+            self.bookkeeping_ops += 1
             self.stats.finished.append(r)
 
     def drain(self, max_steps: int = 1_000_000) -> None:

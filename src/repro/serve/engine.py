@@ -40,8 +40,9 @@ from repro.serve.kv_cache import PagedKVPool
 from repro.sharding.ctx import MeshCtx, trivial_ctx
 
 
-@dataclass(eq=False)              # identity semantics: the core compares
-class GenRequest:                 # requests with list.remove()
+@dataclass(eq=False)              # identity semantics: the core keys its
+class GenRequest:                 # slot dict on id(req), so two requests
+                                  # with equal fields never collide
     rid: int
     tokens: np.ndarray            # prompt (1-D int32)
     max_new: int = 16

@@ -1,0 +1,411 @@
+"""Fleet tier: a multi-replica serving gateway with prefix-aware
+routing (SERVING.md §8).
+
+One ``FleetGateway`` owns N *replicas* — each a full serving stack
+(``ServeCore`` + its own ``PagedKVPool``, exactly the per-process
+objects the single-node tiers use) — plus one global
+``RadixPrefixTree`` (serve/prefix_tree.py) indexing which replica holds
+which prompt prefix resident. Requests flow::
+
+    trace -> router queue -> (select replica) -> replica core -> slots
+
+The *router* decides two things, and the fleet policies differ only
+there, so comparisons isolate routing (every replica runs FIFO
+admission internally):
+
+* **dispatch discipline** — the order the router's own backlog drains
+  in. FIFO for most policies; the ``reciprocating`` router drains a
+  detached entry segment LIFO-within / FIFO-across with the paper's
+  bounded bypass (``core/admission.py::ReciprocatingQueue``) — the
+  arrival-stack discipline lifted from a lock doorway to a fleet
+  doorway, serving burst members while their tenant prefix is hottest.
+* **target selection** — which slack-bearing replica gets the request:
+  ``round_robin`` / ``random`` / ``least_loaded`` baselines, or
+  ``prefix`` (and ``reciprocating``): the replica advertising the
+  longest live cached prefix in the global tree, falling back to
+  least-loaded on a cold prefix.
+
+Coherence: each replica pool is constructed with an ``evict_callback``
+that withdraws the replica from the tree when LRU eviction drops a
+prefix block, so the tree never advertises stale residency for longer
+than the eviction that killed it (regression-tested in
+tests/test_gateway.py). Pool decode-churn keys are not tree-addressed
+and fall through the callback harmlessly.
+
+Memory discipline: traces stream in arrival order, token arrays are
+dropped at dispatch (the interned tree chain replaces them), finished
+requests are folded into streaming ``FleetStats`` every step — a
+million-request trace runs in O(in-flight) memory.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.admission import ReciprocatingQueue
+from repro.serve.core import DrainStalled, Executor, ServeCore
+from repro.serve.kv_cache import PagedKVPool
+from repro.serve.prefix_tree import RadixPrefixTree
+from repro.serve.traces import TraceRequest
+
+
+# -- per-replica work model ----------------------------------------------------
+
+class FleetExecutor(Executor):
+    """Cost-model executor over tree-addressed prompt blocks: prefill
+    pays one chunk per missed block, decode is 1 token/step + pool
+    churn — the same shape as ``scheduler.SimExecutor`` but with the
+    prefix cache keyed by global tree node ids instead of per-family
+    ``prefix_id``s, so hits reflect exactly what the router indexed."""
+
+    def __init__(self, pool: PagedKVPool, block_tokens: int,
+                 prefill_cost_per_block: float):
+        self.pool = pool
+        self.bt = block_tokens
+        self.pc = prefill_cost_per_block
+        self.hit_blocks = 0
+        self.total_blocks = 0
+
+    def admit(self, r: TraceRequest, now: float) -> None:
+        chain = r.chain or []
+        hits = 0
+        for nid in chain:               # longest resident run from root
+            if self.pool.hit_fraction(nid, 1) < 1.0:
+                break
+            hits += 1
+        total = max(1, math.ceil(r.prompt_tokens / self.bt))
+        r.prefill_hit = hits / total
+        self.hit_blocks += hits
+        self.total_blocks += total
+        r._prefill_left = (total - hits) * self.pc
+        r._decode_left = r.decode_tokens
+        for nid in chain:               # prefill (re)materializes the chain
+            self.pool.insert(nid, 1)
+
+    def work(self, active: list, now: float) -> list:
+        done = []
+        for r in active:
+            if r._prefill_left > 0:
+                r._prefill_left -= 1.0
+                continue
+            if r.first_token < 0:
+                r.first_token = now
+            r._decode_left -= 1
+            self.pool.touch_decode(r.rid, 1)
+            if r._decode_left <= 0:
+                done.append(r)
+        return done
+
+
+class Replica:
+    """One engine replica: a core + pool pair, tree-coherent."""
+
+    def __init__(self, idx: int, tree: RadixPrefixTree, max_slots: int,
+                 pool_blocks: int, prefill_cost_per_block: float,
+                 seed: int = 0):
+        self.idx = idx
+        self.pool = PagedKVPool(
+            pool_blocks,
+            evict_callback=lambda key: tree.evict(key[0], idx))
+        self.executor = FleetExecutor(self.pool, tree.block,
+                                      prefill_cost_per_block)
+        self.core = ServeCore(self.executor, policy="fifo",
+                              max_slots=max_slots, seed=seed + idx)
+        self.dispatched = 0
+
+
+# -- routing policies ----------------------------------------------------------
+
+class Router:
+    """Base router: FIFO dispatch + subclass-chosen target selection.
+    ``select`` only ever sees replicas with dispatch-window slack; it
+    returns one of them (never None)."""
+    name = "base"
+
+    def __init__(self, gateway: "FleetGateway", seed: int = 0):
+        self.gw = gateway
+        self.rng = np.random.default_rng(seed)
+        self._q: deque = deque()
+        self._head: TraceRequest | None = None  # popped, awaiting slack
+
+    def submit(self, req: TraceRequest) -> None:
+        self._q.append(req)
+
+    def _pop(self):
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q) + (1 if self._head is not None else 0)
+
+    def select(self, req: TraceRequest, candidates: list) -> int:
+        raise NotImplementedError
+
+    def dispatch(self, now: float) -> None:
+        """Drain the router backlog into replicas until it empties or
+        every replica's dispatch window is full (backpressure). A
+        popped-but-unplaceable request parks in ``_head`` so bounded
+        disciplines never see a re-push."""
+        while True:
+            req = self._head if self._head is not None else self._pop()
+            if req is None:
+                return
+            candidates = self.gw.slack_replicas()
+            if not candidates:
+                self._head = req
+                return
+            self._head = None
+            self.gw.place(req, self.select(req, candidates))
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self, gateway, seed=0):
+        super().__init__(gateway, seed)
+        self._next = 0
+
+    def select(self, req, candidates):
+        n = len(self.gw.replicas)
+        for _ in range(n):
+            idx = self._next % n
+            self._next += 1
+            if idx in candidates:
+                return idx
+        return candidates[0]
+
+
+class RandomRouter(Router):
+    name = "random"
+
+    def select(self, req, candidates):
+        return int(self.rng.choice(candidates))
+
+
+class LeastLoadedRouter(Router):
+    name = "least_loaded"
+
+    def select(self, req, candidates):
+        return min(candidates, key=lambda i: self.gw.replicas[i].core.backlog)
+
+
+class PrefixRouter(Router):
+    """Cache-aware load balancing: score each candidate by the prefill
+    steps its cached prefix saves minus a load penalty per queued
+    request, and take the max. Pure affinity would pile a tenant's
+    whole burst on one replica while the rest idle; the load term makes
+    the burst overflow to the next-least-loaded replica, and the
+    dispatch-time ``insert`` then advertises the tenant there too — hot
+    prefixes replicate exactly as wide as their traffic warrants. With
+    no cached prefix anywhere this degenerates to least-loaded."""
+    name = "prefix"
+
+    def select(self, req, candidates):
+        depths = self.gw.tree.match(req.tokens)
+
+        def score(i):
+            saved = self.gw.pc * depths.get(i, 0)
+            return saved - self.gw.load_penalty * self.gw.replicas[i].core.backlog
+
+        return max(candidates, key=score)
+
+
+class ReciprocatingRouter(PrefixRouter):
+    """Prefix-aware targets + the paper's arrival-stack dispatch: the
+    router backlog is a ``ReciprocatingQueue``, so a burst detaches as
+    one entry segment and drains newest-first with bypass bounded at
+    one segment — burst members land while their shared tenant prefix
+    is still resident, without LIFO starvation."""
+    name = "reciprocating"
+
+    def __init__(self, gateway, seed=0):
+        super().__init__(gateway, seed)
+        self._rq = ReciprocatingQueue(seed)
+
+    def submit(self, req):
+        self._rq.push(req)
+
+    def _pop(self):
+        return self._rq.pop()
+
+    def __len__(self):
+        return len(self._rq) + (1 if self._head is not None else 0)
+
+
+ROUTERS = {
+    "round_robin": RoundRobinRouter,
+    "random": RandomRouter,
+    "least_loaded": LeastLoadedRouter,
+    "prefix": PrefixRouter,
+    "reciprocating": ReciprocatingRouter,
+}
+
+
+def catalogue() -> list:
+    """(name, one-line description) rows for ``repro.bench list
+    --routers``."""
+    return [
+        ("round_robin", "cycle replicas in order; ignores cache and load"),
+        ("random", "uniform random replica; the cache-shredding baseline"),
+        ("least_loaded", "smallest backlog; balances load, ignores cache"),
+        ("prefix", "longest live cached prefix in the global radix tree; "
+                   "least-loaded fallback when cold"),
+        ("reciprocating", "prefix targets + arrival-stack dispatch "
+                          "(entry segments, bounded bypass) at the fleet "
+                          "doorway"),
+    ]
+
+
+# -- fleet-level accounting ----------------------------------------------------
+
+@dataclass
+class FleetStats:
+    """Streaming fleet metrics: O(1) per finished request, O(bins) for
+    the TTFT tail (integer-step histogram — exact, since time is
+    integral)."""
+    n: int = 0
+    sum_ttft: float = 0.0
+    sum_tpot: float = 0.0
+    sum_wait: float = 0.0
+    gen_tokens: int = 0
+    max_ttft: float = 0.0
+    ttft_hist: dict = field(default_factory=dict)
+    per_replica: list = field(default_factory=list)
+
+    def observe(self, r: TraceRequest) -> None:
+        self.n += 1
+        ttft = r.first_token - r.arrival
+        self.sum_ttft += ttft
+        self.max_ttft = max(self.max_ttft, ttft)
+        b = int(ttft)
+        self.ttft_hist[b] = self.ttft_hist.get(b, 0) + 1
+        self.sum_tpot += ((r.finished - r.first_token)
+                          / max(r.decode_tokens - 1, 1))
+        self.sum_wait += r.admitted - r.arrival
+        self.gen_tokens += r.decode_tokens
+
+    def p_ttft(self, q: float) -> float:
+        rank = q * self.n
+        seen = 0
+        for b in sorted(self.ttft_hist):
+            seen += self.ttft_hist[b]
+            if seen >= rank:
+                return float(b)
+        return self.max_ttft
+
+    def summary(self, elapsed: float, hit_blocks: int,
+                total_blocks: int) -> dict:
+        n = max(self.n, 1)
+        counts = self.per_replica or [0]
+        mean_load = sum(counts) / len(counts)
+        return {
+            "n": self.n,
+            "mean_ttft": self.sum_ttft / n,
+            "p99_ttft": self.p_ttft(0.99),
+            "max_ttft": self.max_ttft,
+            "mean_tpot": self.sum_tpot / n,
+            "mean_wait": self.sum_wait / n,
+            "goodput_tok_per_step": self.gen_tokens / max(elapsed, 1e-9),
+            "hit_rate": hit_blocks / max(total_blocks, 1),
+            "load_imbalance": max(counts) / max(mean_load, 1e-9),
+        }
+
+
+# -- the gateway ---------------------------------------------------------------
+
+class FleetGateway:
+    """N replicas behind one router, stepped in lockstep (1 gateway
+    step == 1 decode iteration on every replica)."""
+
+    def __init__(self, n_replicas: int = 4, router: str = "prefix",
+                 max_slots: int = 8, pool_blocks: int = 256,
+                 block_tokens: int = 16, prefill_cost_per_block: float = 1.0,
+                 queue_depth: int = 4, load_penalty: float = 4.0,
+                 seed: int = 0):
+        self.tree = RadixPrefixTree(block_tokens)
+        self.pc = prefill_cost_per_block
+        # marginal TTFT cost of one queued request ahead of you,
+        # ~ mean service time / slots; the prefix router's exchange rate
+        # between cache affinity and queueing delay
+        self.load_penalty = load_penalty
+        self.replicas = [
+            Replica(i, self.tree, max_slots, pool_blocks,
+                    prefill_cost_per_block, seed=seed)
+            for i in range(n_replicas)
+        ]
+        if router not in ROUTERS:
+            raise ValueError(f"unknown router {router!r}; "
+                             f"one of {sorted(ROUTERS)}")
+        self.router = ROUTERS[router](self, seed)
+        self.router_name = router
+        self.window = max_slots * queue_depth   # dispatch window / replica
+        self.stats = FleetStats(per_replica=[0] * n_replicas)
+        self.time = 0.0
+
+    # -- router-facing surface ------------------------------------------------
+    def slack_replicas(self) -> list:
+        """Replicas whose dispatch window isn't full. The window
+        (slots x queue_depth) is the backpressure knob: small enough
+        that the router keeps choices, large enough to hide dispatch
+        latency."""
+        return [r.idx for r in self.replicas
+                if r.core.backlog < self.window]
+
+    def place(self, req: TraceRequest, idx: int) -> None:
+        """Commit a routing decision: advertise the prompt chain in the
+        tree, drop the token array (the chain now addresses it), hand
+        the request to the replica core."""
+        rep = self.replicas[idx]
+        req.replica = idx
+        req.chain = self.tree.insert(req.tokens, idx)
+        req.tokens = None
+        rep.dispatched += 1
+        self.stats.per_replica[idx] += 1
+        rep.core.submit(req)
+
+    # -- drive ----------------------------------------------------------------
+    def step(self) -> None:
+        self.time += 1.0
+        self.router.dispatch(self.time)
+        for rep in self.replicas:
+            rep.core.step()
+            fin = rep.core.stats.finished
+            for r in fin:
+                self.stats.observe(r)
+            fin.clear()                 # streaming: never accumulate
+
+    def has_work(self) -> bool:
+        return bool(len(self.router)
+                    or any(r.core.has_work() for r in self.replicas))
+
+    def run(self, trace, max_steps: int = 50_000_000) -> dict:
+        """Drive a trace (any iterator of ``TraceRequest`` in arrival
+        order) to completion and return the fleet summary."""
+        it = iter(trace)
+        nxt = next(it, None)
+        steps = 0
+        while nxt is not None or self.has_work():
+            if steps >= max_steps:
+                raise DrainStalled(
+                    f"fleet drain({max_steps=}) exhausted with "
+                    f"{len(self.router)} routed-queue, "
+                    f"{sum(r.core.backlog for r in self.replicas)} "
+                    f"in-replica requests")
+            while nxt is not None and nxt.arrival <= self.time + 1.0:
+                self.router.submit(nxt)
+                nxt = next(it, None)
+            self.step()
+            steps += 1
+        return self.summary()
+
+    def summary(self) -> dict:
+        hit = sum(r.executor.hit_blocks for r in self.replicas)
+        tot = sum(r.executor.total_blocks for r in self.replicas)
+        out = self.stats.summary(self.time, hit, tot)
+        out["router"] = self.router_name
+        out["tree_nodes"] = self.tree.n_nodes
+        out["bookkeeping_ops"] = sum(r.core.bookkeeping_ops
+                                     for r in self.replicas)
+        return out

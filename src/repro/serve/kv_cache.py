@@ -64,7 +64,8 @@ class PoolStats:
 class PagedKVPool:
     """LRU block pool keyed by ``(prefix_id, block_idx)`` (SERVING.md §2)."""
 
-    def __init__(self, capacity_blocks: int, reserve_null: bool = False):
+    def __init__(self, capacity_blocks: int, reserve_null: bool = False,
+                 evict_callback=None):
         if capacity_blocks < 1 + int(reserve_null):
             raise ValueError("pool needs at least one allocatable block")
         self.cap = capacity_blocks
@@ -74,6 +75,12 @@ class PagedKVPool:
         self._meta: dict = {}                   # block_id -> _BlockMeta
         self._cached: OrderedDict = OrderedDict()   # key -> block_id (LRU)
         self._owned: dict = {}                  # owner -> [block_id, ...]
+        #: called with the ``(prefix_id, block_idx)`` key whenever a
+        #: cached prefix block is dropped from the pool (LRU eviction) —
+        #: the hook a fleet router uses to keep its global prefix index
+        #: coherent with per-replica residency (SERVING.md §8). Fires
+        #: mid-allocation: the callback must not re-enter the pool.
+        self.evict_callback = evict_callback
         self.stats = PoolStats()
 
     # -- capacity accounting --------------------------------------------------
@@ -114,6 +121,8 @@ class PagedKVPool:
                 del self._cached[key]
                 del self._meta[bid]
                 self.stats.evictions += 1
+                if self.evict_callback is not None:
+                    self.evict_callback(key)
                 return bid
         self.stats.exhausted += 1
         raise KVPoolExhausted(

@@ -1,0 +1,215 @@
+"""Global radix prefix tree — the fleet router's cache index
+(SERVING.md §8).
+
+The gateway routes each request to the replica already holding its
+longest *live* cached prefix. This tree is the index that makes that
+O(prompt blocks): one node per full token block, edges labelled by the
+block's token bytes, each node carrying the set of replicas that
+(claim to) hold that block resident. Two request streams that share a
+system prompt share a path; their unique suffixes branch.
+
+The tree plays three roles at once:
+
+* **content addressing** — every node has a stable integer id that
+  uniquely identifies the *chain* root..node (parent identity is part of
+  the interning key, so equal block content under different prefixes
+  gets different ids). Per-replica ``PagedKVPool``s key their cached
+  blocks on these ids (``chain_ids``), which is what lets one global
+  index describe N independent pools without hashing collisions.
+* **routing index** — ``match(tokens)`` walks the tree once and returns,
+  for every replica, the length of the longest prefix run it is
+  advertised for. A run must be *contiguous from the root*: a replica
+  that evicted block 2 cannot serve blocks 3.. even if they linger in
+  its pool, so it drops out of the walk at depth 2.
+* **coherence mirror** — each replica pool's ``evict_callback``
+  (serve/kv_cache.py) calls ``evict(node_id, replica)`` when LRU
+  eviction drops a block, which removes the replica from that node AND
+  its whole subtree (a deeper block is unreachable without its prefix).
+  Nodes left with no replicas and no children are pruned, so tree size
+  tracks fleet-wide residency, not trace length.
+
+The tree never stores token arrays — edges are the raw little-endian
+int32 bytes of one block (cheap to slice out of a prompt, hashable,
+exact). Partial trailing blocks are never indexed, mirroring the
+engine-side rule that only full prompt-prefix blocks are shareable
+(serve/engine.py ``_prefix_blocks``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+class _Node:
+    __slots__ = ("nid", "parent", "edge", "children", "replicas")
+
+    def __init__(self, nid: int, parent: "_Node | None", edge: bytes):
+        self.nid = nid
+        self.parent = parent
+        self.edge = edge                # block bytes labelling parent->self
+        self.children: dict = {}        # block bytes -> _Node
+        self.replicas: set = set()      # replica indices advertised here
+
+
+@dataclass
+class TreeStats:
+    interned: int = 0               # nodes ever created
+    pruned: int = 0                 # nodes reclaimed after eviction
+    evictions: int = 0              # evict() calls that removed a replica
+    matches: int = 0                # match() walks
+
+    def to_dict(self) -> dict:
+        return {"interned": self.interned, "pruned": self.pruned,
+                "evictions": self.evictions, "matches": self.matches}
+
+
+class RadixPrefixTree:
+    """Block-granular radix tree over token prefixes (SERVING.md §8)."""
+
+    def __init__(self, block_tokens: int):
+        if block_tokens < 1:
+            raise ValueError("block_tokens must be >= 1")
+        self.block = block_tokens
+        self._root = _Node(0, None, b"")
+        self._by_id: dict = {0: self._root}     # nid -> node (evict path)
+        self._next_id = 1
+        self.stats = TreeStats()
+
+    # -- block plumbing -------------------------------------------------------
+    def blocks_of(self, tokens) -> list:
+        """Full-block byte labels of ``tokens`` (partial tail dropped)."""
+        arr = np.asarray(tokens, np.int32).reshape(-1)
+        bs = self.block
+        return [arr[j * bs:(j + 1) * bs].tobytes()
+                for j in range(len(arr) // bs)]
+
+    @property
+    def n_nodes(self) -> int:
+        """Live nodes, excluding the root."""
+        return len(self._by_id) - 1
+
+    # -- interning + advertisement --------------------------------------------
+    def _descend(self, blk: bytes, node: _Node) -> _Node:
+        child = node.children.get(blk)
+        if child is None:
+            child = _Node(self._next_id, node, blk)
+            node.children[blk] = child
+            self._by_id[child.nid] = child
+            self._next_id += 1
+            self.stats.interned += 1
+        return child
+
+    def chain_ids(self, tokens) -> list:
+        """Intern the full-block chain of ``tokens`` and return one
+        stable node id per block — the content addresses a replica pool
+        keys its cached blocks under. Does NOT advertise a replica."""
+        node = self._root
+        ids = []
+        for blk in self.blocks_of(tokens):
+            node = self._descend(blk, node)
+            ids.append(node.nid)
+        return ids
+
+    def insert(self, tokens, replica: int) -> list:
+        """Advertise ``replica`` along the full-block chain of
+        ``tokens`` (the router calls this at dispatch: the blocks will
+        be resident once the replica prefills). Returns the chain's node
+        ids, same as ``chain_ids``."""
+        node = self._root
+        ids = []
+        for blk in self.blocks_of(tokens):
+            node = self._descend(blk, node)
+            node.replicas.add(replica)
+            ids.append(node.nid)
+        return ids
+
+    # -- routing --------------------------------------------------------------
+    def match(self, tokens) -> dict:
+        """Longest advertised prefix run per replica: ``{replica: depth
+        in blocks}`` for every replica advertised on a contiguous run
+        from the root. Replicas absent from the dict match 0 blocks."""
+        self.stats.matches += 1
+        out: dict = {}
+        node = self._root
+        live: set | None = None
+        depth = 0
+        for blk in self.blocks_of(tokens):
+            node = node.children.get(blk)
+            if node is None:
+                break
+            live = (set(node.replicas) if live is None
+                    else live & node.replicas)
+            if not live:
+                break
+            depth += 1
+            for r in live:
+                out[r] = depth
+        return out
+
+    # -- eviction coherence ---------------------------------------------------
+    def evict(self, node_id: int, replica: int) -> bool:
+        """A replica's pool dropped the block content-addressed by
+        ``node_id``: withdraw the replica from that node and its whole
+        subtree (deeper blocks are unreachable without their prefix),
+        pruning nodes left with no replicas and no children. Unknown ids
+        (e.g. a pool's decode-churn keys) are ignored. Returns whether a
+        withdrawal happened."""
+        node = self._by_id.get(node_id)
+        if node is None:
+            return False
+        hit = False
+        visited = []
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            visited.append(n)
+            if replica in n.replicas:
+                n.replicas.discard(replica)
+                hit = True
+            stack.extend(n.children.values())
+        if hit:
+            self.stats.evictions += 1
+        # prune every node the withdrawal may have emptied; _prune_up
+        # re-checks emptiness on each upward hop, so visit order is
+        # irrelevant and already-pruned nodes (parent=None) are no-ops
+        for n in visited:
+            self._prune_up(n)
+        return hit
+
+    def drop_replica(self, replica: int) -> None:
+        """Withdraw ``replica`` everywhere (replica drained/restarted)."""
+        visited = []
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            visited.append(n)
+            n.replicas.discard(replica)
+            stack.extend(n.children.values())
+        for n in visited:
+            self._prune_up(n)
+
+    def _prune_up(self, node: _Node) -> None:
+        while (node.parent is not None and not node.replicas
+               and not node.children):
+            parent = node.parent
+            del parent.children[node.edge]
+            del self._by_id[node.nid]
+            node.parent = None
+            self.stats.pruned += 1
+            node = parent
+
+    # -- invariants (exercised by tests/test_gateway.py) ----------------------
+    def check(self) -> None:
+        seen = {}
+        stack = [self._root]
+        while stack:
+            n = stack.pop()
+            seen[n.nid] = n
+            for edge, child in n.children.items():
+                assert child.parent is n, f"broken parent link at {child.nid}"
+                assert child.edge == edge, f"edge mismatch at {child.nid}"
+                assert (child.replicas or child.children), \
+                    f"unpruned empty leaf {child.nid}"
+                stack.append(child)
+        assert seen == self._by_id, "id index out of sync with tree"

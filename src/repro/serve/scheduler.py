@@ -28,8 +28,9 @@ from repro.serve.kv_cache import PagedKVPool, PrefixCachePool  # noqa: F401
 SchedulerStats = ServeStats
 
 
-@dataclass(eq=False)              # identity semantics: the core compares
-class Request:                    # requests with list.remove()
+@dataclass(eq=False)              # identity semantics: the core keys its
+class Request:                    # slot dict on id(req), so two requests
+                                  # with equal fields never collide
     rid: int
     arrival: float
     prefix_id: int              # shared-prompt family (prefix cache key)

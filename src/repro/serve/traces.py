@@ -1,0 +1,138 @@
+"""Synthetic multi-tenant serving traces for the fleet gateway
+(SERVING.md §8).
+
+Real gateway traffic has three kinds of structure a uniform-random trace
+would erase, and each one matters for routing:
+
+* **shared prefixes** — requests belong to *tenants*, and every request
+  from a tenant opens with that tenant's system prompt (the same token
+  blocks, every time). This is what prefix-aware routing exploits: land
+  a tenant's traffic on the replica already holding its prompt blocks.
+  Tenant weights are Zipf-distributed, so a few hot tenants dominate —
+  the regime where affinity pays and random routing shreds the cache.
+* **bursty arrivals** — requests come in Poisson bursts (a tenant's
+  users pile on together), not an even drizzle. Bursts are what stress
+  the dispatch discipline: the ``reciprocating`` router's entry segment
+  batches a burst and drains it with bounded bypass.
+* **heavy-tailed lengths** — decode lengths are lognormal: most
+  responses are short, a few are very long and occupy slots for
+  thousands of steps. The tail is what creates load imbalance for
+  affinity-only routing to trade off against.
+
+Everything is seeded and streamed: ``generate(...)`` yields
+``TraceRequest``s in nondecreasing arrival order, one at a time, so a
+million-request trace costs O(burst) memory, not O(trace). Token ids are
+materialized lazily per request (the tenant prompt array is shared; only
+the unique suffix is fresh) and the gateway drops them after routing.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(eq=False)            # identity semantics, like GenRequest:
+class TraceRequest:             # the core keys slots on id(req)
+    rid: int
+    arrival: float
+    tenant: int
+    tokens: np.ndarray | None   # full prompt (tenant prefix + unique tail)
+    prompt_tokens: int          # == len(tokens); survives tokens=None
+    shared_tokens: int          # tenant-prefix portion of the prompt
+    decode_tokens: int
+    # runtime (set by the gateway / executor)
+    admitted: float = -1.0
+    finished: float = -1.0
+    first_token: float = -1.0
+    prefill_hit: float = 0.0
+    replica: int = -1
+    # routing state (set at dispatch)
+    chain: list | None = None   # prefix-tree node ids for the prompt
+    _prefill_left: float = 0.0
+    _decode_left: int = 0
+
+
+@dataclass
+class TraceSpec:
+    """Knobs for one synthetic tenant mix (all rates are per step)."""
+    n_requests: int = 10_000
+    n_tenants: int = 160
+    zipf_s: float = 1.1             # tenant popularity skew
+    shared_blocks: tuple = (4, 12)  # tenant system-prompt size range
+    unique_blocks: tuple = (0, 4)   # per-request unique prompt tail range
+    block_tokens: int = 16
+    burst_rate: float = 0.2         # bursts per step (Poisson)
+    burst_size: float = 6.0         # mean extra requests/burst (geometric)
+    burst_width: float = 4.0        # steps a burst's arrivals spread over
+    decode_mu: float = 3.2          # lognormal decode length (median ~25)
+    decode_sigma: float = 0.8
+    decode_cap: int = 512
+    seed: int = 0
+    # Defaults target ~1.4 requests/step: an 8-replica x 8-slot fleet
+    # serves ~1.8 req/step (mean decode ~34 steps + ~1-2 prefill), so
+    # the fleet runs ~80% loaded — queues form, waits differentiate
+    # routers, but the trace drains.
+
+
+def generate(spec: TraceSpec):
+    """Yield ``TraceRequest``s in nondecreasing arrival order.
+
+    Bursts are drawn on a Poisson clock; each burst belongs to one
+    Zipf-weighted tenant and scatters a geometric number of requests
+    over ``burst_width`` steps. A small heap reorders arrivals across
+    overlapping bursts; it holds only the not-yet-safe tail, so memory
+    is O(concurrent bursts), independent of ``n_requests``."""
+    rng = np.random.default_rng(spec.seed)
+    lo_s, hi_s = spec.shared_blocks
+    lo_u, hi_u = spec.unique_blocks
+    bt = spec.block_tokens
+
+    # Tenant catalogue: popularity + a fixed shared system prompt each.
+    # Token ids are partitioned by tenant (tenant t draws from [t*M,
+    # (t+1)*M)) so two tenants never alias a block by accident.
+    weights = 1.0 / np.arange(1, spec.n_tenants + 1) ** spec.zipf_s
+    weights /= weights.sum()
+    vocab_per_tenant = 100_000
+    prompts = []
+    for t in range(spec.n_tenants):
+        blocks = int(rng.integers(lo_s, hi_s + 1))
+        prompts.append(rng.integers(t * vocab_per_tenant,
+                                    (t + 1) * vocab_per_tenant,
+                                    size=blocks * bt, dtype=np.int32))
+
+    heap: list = []             # (arrival, rid, req) — reorder buffer
+    rid = 0
+    t_now = 0.0
+    emitted = 0
+    while emitted < spec.n_requests:
+        if rid < spec.n_requests:
+            # next burst start, then scatter its members
+            t_now += rng.exponential(1.0 / spec.burst_rate)
+            tenant = int(rng.choice(spec.n_tenants, p=weights))
+            size = min(1 + rng.geometric(1.0 / spec.burst_size),
+                       spec.n_requests - rid)
+            offsets = np.sort(rng.uniform(0.0, spec.burst_width, size))
+            shared = prompts[tenant]
+            for off in offsets:
+                uniq = int(rng.integers(lo_u, hi_u + 1)) * bt
+                tail = rng.integers(spec.n_tenants * vocab_per_tenant,
+                                    spec.n_tenants * vocab_per_tenant * 2,
+                                    size=uniq, dtype=np.int32)
+                tokens = np.concatenate([shared, tail]) if uniq else shared
+                decode = int(min(spec.decode_cap, 1 + rng.lognormal(
+                    spec.decode_mu, spec.decode_sigma)))
+                req = TraceRequest(
+                    rid=rid, arrival=float(t_now + off), tenant=tenant,
+                    tokens=tokens, prompt_tokens=len(tokens),
+                    shared_tokens=len(shared), decode_tokens=decode)
+                heapq.heappush(heap, (req.arrival, rid, req))
+                rid += 1
+        # Everything that arrived before the next possible burst start
+        # (t_now) is safely ordered — later bursts begin at > t_now.
+        safe_until = t_now if rid < spec.n_requests else float("inf")
+        while heap and heap[0][0] <= safe_until:
+            _, _, req = heapq.heappop(heap)
+            emitted += 1
+            yield req
