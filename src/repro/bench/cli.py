@@ -124,12 +124,14 @@ def cmd_list(args) -> int:
     show_topologies = getattr(args, "topologies", False)
     show_schedulers = getattr(args, "schedulers", False)
     show_routers = getattr(args, "routers", False)
+    show_backends = getattr(args, "backends", False)
     show_cache = getattr(args, "cache", False)
     show_properties = getattr(args, "properties", False)
     show_suites = (getattr(args, "suites", False)
                    or not (show_programs or show_topologies
                            or show_schedulers or show_routers
-                           or show_cache or show_properties))
+                           or show_backends or show_cache
+                           or show_properties))
     if show_suites:
         print("# suites")
         for name in registry.names():
@@ -178,6 +180,15 @@ def cmd_list(args) -> int:
             print(f"{name:14s} {summary}")
         print(f"{'':14s} pass names to FleetGateway(router=...) or the "
               "gateway bench suite")
+    if show_backends:
+        from repro.core.locks.pallas_backend import backends
+        print("# execution backends (availability-probed; "
+              "core/locks/pallas_backend.py)")
+        for row in backends():
+            mark = "available" if row["available"] else "UNAVAILABLE"
+            print(f"{row['name']:17s} {mark:12s} {row['detail']}")
+        print(f"{'':17s} the `measured` suite auto-selects "
+              "pallas-device when present, else pallas-interpret")
     if show_properties:
         from repro.core.locks import verify as verify_mod
         print("# verified/declared lock properties (structural analysis "
@@ -312,6 +323,10 @@ def build_parser() -> argparse.ArgumentParser:
     ls.add_argument("--routers", action="store_true",
                     help="enumerate the fleet-gateway routing policy "
                          "catalogue (serve/gateway.py)")
+    ls.add_argument("--backends", action="store_true",
+                    help="probe and enumerate the execution backends "
+                         "(sim / pallas-interpret / pallas-device — "
+                         "core/locks/pallas_backend.py)")
     ls.add_argument("--properties", action="store_true",
                     help="print the per-lock verified/declared property "
                          "matrix (structural analysis only; see `verify`)")

@@ -29,10 +29,15 @@ builders end-to-end and is what regenerates ``docs/RESULTS.md``:
   serve        beyond-paper serving engine: policy × load sweep on the
                unified core + paged-KV pool, model-backed engine smoke
                (docs/SERVING.md)
+  measured     beyond-sim measured tier (DESIGN.md §L2): the Fig 1-3
+               sweeps as real Pallas kernels over the device atomics
+               layer (bench/measured.py; interpret-mode on CPU), the
+               sim-vs-Pallas backend-agreement table, and the CostModel
+               calibration error table (bench/calibrate.py)
   kernels      beyond-paper serpentine DMA savings accounting
   roofline     EXPERIMENTS  dry-run artifact aggregation
-  paper        Figs 1-3 + Table 1 + topology + fairness/bypass + serve,
-               one document
+  paper        Figs 1-3 + Table 1 + topology + fairness/bypass + serve
+               + measured, one document
 """
 from __future__ import annotations
 
@@ -45,6 +50,7 @@ from dataclasses import replace
 import numpy as np
 
 from repro.bench import report, sweep
+from repro.bench.measured import build_measured
 from repro.bench.registry import BenchConfig, emit, register
 from repro.bench.schema import (
     hist_experiment, scalars_experiment, sweep_experiment, table_experiment,
@@ -1048,6 +1054,13 @@ register("gateway", "Fleet serving gateway (beyond paper, "
          "radix prefix tree: router comparison table, offered-load "
          "sweep, and the 100k/1M-request at-scale run with the "
          "O(requests) bookkeeping bound asserted.")(build_gateway)
+register("measured", "Measured tier: Pallas-backend paper sweeps "
+         "(DESIGN.md §L2)",
+         "Fig 1-3 style throughput/latency sweeps executed as real "
+         "Pallas kernels over the device atomics layer (interpret-mode "
+         "fallback on CPU), the sim-vs-Pallas backend-agreement table, "
+         "and the CostModel calibration error table "
+         "(bench/calibrate.py).")(build_measured)
 register("kernels", "Serpentine kernel accounting (beyond paper)",
          "Structural KV-fetch savings of the serpentine flash-attention "
          "schedule.")(build_kernels)
@@ -1067,7 +1080,8 @@ register("verify", "Verified lock properties (DESIGN.md §L2)",
           "traffic, fairness and bounded-bypass histograms — plus the "
           "beyond-paper extended lock zoo (locks-ext), machine-topology "
           "(topology), hostile-OS scheduler (hostile), serving "
-          "(docs/SERVING.md) and fleet-gateway (SERVING.md §8) sections.",
+          "(docs/SERVING.md), fleet-gateway (SERVING.md §8) and "
+          "measured Pallas-backend (bench/measured.py) sections.",
           tags=("paper",))
 def build_paper(cfg: BenchConfig) -> list:
     exps = []
@@ -1087,5 +1101,6 @@ def build_paper(cfg: BenchConfig) -> list:
     exps += build_fairness(cfg)
     exps += build_serve(cfg)
     exps += build_gateway(cfg)
+    exps += build_measured(cfg)
     exps += build_verify(cfg)
     return exps

@@ -1,189 +1,42 @@
-"""Compiler: lower a declarative ``LockSpec`` to a ``Program`` handler table.
+"""Compiler façade: lower a declarative ``LockSpec`` to a backend.
 
-``compile_spec(author, n_threads, ncs_max=..., cs_shared=...)`` runs the
-spec author function against a fresh :class:`~repro.core.locks.dsl.LockSpec`
-builder, assigns program counters to the labelled steps, and injects the
-scaffolding every lock shares instead of having each lock restate it:
+The actual lowering lives in ``core/locks/ir.py`` — ``lower_spec``
+produces the backend-neutral :class:`~repro.core.locks.ir.LockIR`
+(phase flattening, label/register resolution, region layout/NUMA
+homing, injected NCS/CS scaffolding, the eager abstract trace and the
+structural ``cfg.py`` gate), and each backend consumes the IR:
 
-* **pc 0 — NCS handler.** The MutexBench non-critical section (paper
-  §7.1): a per-thread xorshift-driven ``DELAY`` of up to ``ncs_max``
-  cycles, then jump to the first declared step.
-* **CS profile handlers.** ``c.enter_cs()`` emits the first CS op and
-  routes through an injected second-CS handler into the first ``release``
-  step. Profiles (selected by ``cs_shared``): ``"rw"``/``True`` — advance
-  the shared PRNG word (Figs 1-2), ``"ro"`` — two read-only lookups
-  (LevelDB-readrandom analogue, Fig. 3), ``"local"``/``False`` — a
-  degenerate local CS (Table 1).
+* ``compile_spec`` here — the sim backend: ``LockIR`` wrapped into the
+  ``core/sim/machine.py`` ``Program`` handler-table form. Keeps the
+  historical per-lock builder signature so a
+  ``functools.partial(compile_spec, author)`` is a drop-in entry for
+  the ``PROGRAMS`` registry, and is bit-identical to the pre-IR
+  one-shot compiler (``tests/test_ir_backends.py`` pins the digests).
+* ``core/locks/pallas_backend.py`` — the measured backend: the same IR
+  lowered to a ``pl.pallas_call`` kernel over real device atomics.
 
-The lowered ``Program`` is exactly the handler-table form
-``core/sim/machine.py`` consumes — handler at ``pc`` gets
-``(t, regs, res, rng)`` and returns ``(regs, next_pc, op4, arrive, admit,
-rng)``, with op/result encodings per the machine.py contract table — so
-compiled specs drop into ``run_machine`` / the ``SimEngine`` session API
-and the ``repro.bench`` sweep driver unchanged.
-
-NUMA homing lowers *thread-indexed*: a ``s.per_thread(...)`` region
-becomes ``Program.home[base + i] = i`` (thread i's sequestered line) and
-lock/global words get ``-1`` (homed with thread 0, "node 0"). Which
-physical domain that means is the machine's business — the engine's
-cost-matrix lookup ``LoweredCost.miss[t, home]`` composes the home table
-with the topology's thread→leaf *placement* (``core/sim/topology.py``),
-so one compiled program runs unchanged on every machine, including
-interleaved pinnings.
+Scaffolding semantics (paper §7.1 NCS delay, the ``rw``/``ro``/``local``
+CS profiles) and the NUMA-homing convention (``s.per_thread`` regions
+homed on the owning thread, lock/global words on node 0) are documented
+on ``lower_spec``; op/result encodings are the contract table at the
+top of ``core/sim/machine.py``, exposed as data in ``ir.OP_TABLE``.
 """
 from __future__ import annotations
 
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.locks.dsl import (
-    CS2_WORD, CS_WORD, Ctx, LockSpec, SpecError, _b, _i,
+from repro.core.locks.ir import (           # noqa: F401  (re-exports)
+    build_spec, describe_spec, lower_spec, to_sim_program,
 )
-from repro.core.sim.machine import DELAY, LOAD, Program, STORE
+from repro.core.sim.machine import Program
 
 __all__ = ["compile_spec", "describe_spec", "build_spec"]
 
 
-def _xorshift(r):
-    r = r ^ (r << jnp.uint32(13))
-    r = r ^ (r >> jnp.uint32(17))
-    r = r ^ (r << jnp.uint32(5))
-    return r
-
-
-def _cs_mode(cs_shared) -> str:
-    return cs_shared if isinstance(cs_shared, str) else (
-        "rw" if cs_shared else "local")
-
-
-def _cs1_op(cs_shared) -> tuple:
-    mode = _cs_mode(cs_shared)
-    if mode in ("rw", "ro"):
-        return (_i(LOAD), _i(CS_WORD), _i(0), _i(0))
-    return (_i(DELAY), _i(0), _i(1), _i(0))
-
-
-def _cs2_op(cs_shared, res) -> tuple:
-    mode = _cs_mode(cs_shared)
-    if mode == "rw":
-        return (_i(STORE), _i(CS_WORD), _i(res + 1), _i(0))
-    if mode == "ro":
-        return (_i(LOAD), _i(CS2_WORD), _i(0), _i(0))
-    return (_i(DELAY), _i(0), _i(1), _i(0))
-
-
-def _ncs_handler(next_pc: int, ncs_max: int):
-    def h(t, regs, res, rng):
-        rng = _xorshift(rng)
-        d = _i(rng % jnp.uint32(max(ncs_max, 1))) * (ncs_max > 0)
-        return (regs, _i(next_pc), (_i(DELAY), _i(0), d, _i(0)),
-                _b(False), _b(False), rng)
-    return h
-
-
-def build_spec(author: Callable, n_threads: int,
-               name: str | None = None) -> LockSpec:
-    """Run the author function; return the populated, validated builder."""
-    spec = LockSpec(name or author.__name__, n_threads)
-    author(spec)
-    spec.validate()
-    return spec
-
-
-def describe_spec(author: Callable, n_threads: int = 2) -> dict:
-    """Introspect a spec without lowering it: phase -> step labels, plus
-    the memory layout (for ``python -m repro.bench list --programs``)."""
-    spec = build_spec(author, n_threads)
-    return {
-        "name": spec.name,
-        "phases": spec.phase_summary(),
-        "n_steps": len(spec.steps),
-        "regs": sorted(spec.regmap, key=spec.regmap.get),
-        "words": dict(spec.words),
-        "regions": [(r.name, r.size, "per-thread" if r.homed else "global")
-                    for r in spec.regions],
-    }
-
-
 def compile_spec(author: Callable, n_threads: int, *, ncs_max: int = 0,
                  cs_shared=True, name: str | None = None) -> Program:
-    """Lower ``author``'s spec to a ``core.sim.machine.Program``.
-
-    Keeps the signature of the historical per-lock builder functions, so a
-    ``functools.partial(compile_spec, author)`` is a drop-in entry for the
-    ``PROGRAMS`` registry.
-    """
-    spec = build_spec(author, n_threads, name)
-    T = n_threads
-
-    # pc layout: 0 = injected NCS; 1..N = declared steps; N+1 = injected
-    # second-CS handler. NCS label -> 0 closes the episode loop.
-    labels = {"ncs": 0}
-    for i, st in enumerate(spec.steps):
-        labels[st.label] = 1 + i
-    cs2_pc = 1 + len(spec.steps)
-    release_pc = next(labels[st.label] for st in spec.steps
-                      if st.phase == "release")
-    cs1 = _cs1_op(cs_shared)
-
-    def make_handler(idx: int):
-        st = spec.steps[idx]
-        fallthrough = 2 + idx if idx + 1 < len(spec.steps) else None
-
-        def h(t, regs, res, rng):
-            c = Ctx(t=t, T=T, res=res, regs=regs, rng=rng,
-                    regmap=spec.regmap, labels=labels,
-                    fallthrough=fallthrough, cs1_op=cs1, cs2_pc=cs2_pc)
-            try:
-                out = st.fn(c)
-            except SpecError as e:
-                raise SpecError(f"{spec.name}.{st.label}: {e}") from e
-            if out is None:
-                raise SpecError(f"{spec.name}.{st.label}: step returned "
-                                "None (must return c.op/c.when/c.enter_cs)")
-            op = tuple(_i(x) for x in out.op)
-            return (c.r._arr, _i(out.pc), op,
-                    _b(out.arrive), _b(out.admit), rng)
-        return h
-
-    def cs2_handler(t, regs, res, rng):
-        return (regs, _i(release_pc), _cs2_op(cs_shared, res),
-                _b(False), _b(False), rng)
-
-    handlers = tuple([_ncs_handler(1, ncs_max)]
-                     + [make_handler(i) for i in range(len(spec.steps))]
-                     + [cs2_handler])
-    # Eager abstract trace of every handler: unknown labels/registers,
-    # steps returning None, and bad fallthroughs are *compile-time*
-    # errors, not mid-sweep tracer failures.
-    probe = (jnp.int32(0), jnp.zeros((Program.n_regs,), jnp.int32),
-             jnp.int32(0), jnp.uint32(1))
-    for st, h in zip(spec.steps, handlers[1:]):
-        try:
-            jax.eval_shape(h, *probe)
-        except SpecError:
-            raise
-        except Exception as e:
-            raise SpecError(
-                f"{spec.name}.{st.label}: step failed to trace: {e}") from e
-    # Cheap structural verification (core/locks/cfg.py): loop-free
-    # doorway/release by default, plus two-sided checks of any
-    # s.expect(...) declarations. Violations are SpecErrors with
-    # phase/label provenance; a spec body the recorder cannot replay
-    # (exotic jnp use) degrades to unverified rather than failing the
-    # compile — the `repro.bench verify` CLI reports it as such.
-    from repro.core.locks import cfg as _cfg
-    try:
-        facts = _cfg.analyze(spec)
-    except SpecError:
-        raise
-    except Exception:
-        facts = None
-    if facts is not None:
-        violations = _cfg.check_spec(facts)
-        if violations:
-            raise SpecError(f"{spec.name}: {violations[0]}")
-    return Program(handlers=handlers, n_mem=spec.n_mem, home=spec.home(),
-                   name=spec.name, init_mem=tuple(spec.inits))
+    """Lower ``author``'s spec to a ``core.sim.machine.Program`` —
+    ``lower_spec`` (backend-neutral IR) then ``to_sim_program``
+    (Backend #1)."""
+    return to_sim_program(lower_spec(author, n_threads, ncs_max=ncs_max,
+                                     cs_shared=cs_shared, name=name))

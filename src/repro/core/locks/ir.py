@@ -1,0 +1,299 @@
+"""Portable lock IR: the backend-neutral middle of the compile pipeline.
+
+``LockSpec`` phase specs lower in two stages::
+
+    LockSpec --lower_spec--> LockIR --+--> to_sim_program -> sim Program
+                                      +--> pallas_backend  -> device kernel
+
+``lower_spec`` does everything that is *backend-neutral* about
+compilation — phase flattening, label -> program-counter resolution,
+register binding, memory-region layout/NUMA homing, the injected
+NCS/CS-profile scaffolding, the eager per-handler abstract trace, and
+the structural ``cfg.py`` verification gate. The result, a
+:class:`LockIR`, carries the resolved handler table in the machine's
+calling convention plus the layout/phase metadata a backend needs to
+schedule it.
+
+Backends:
+
+* **sim** (:func:`to_sim_program`) — wraps the IR into the
+  ``core/sim/machine.py`` ``Program`` handler-table form, executed by
+  the discrete-time coherence interpreter under ``lax.scan``. The IR
+  carries the *same handler closures* the historical one-shot compiler
+  built, so lowering through the IR is bit-identical to the pre-IR
+  pipeline (pinned by ``tests/test_ir_backends.py`` golden digests for
+  every spec in the zoo) and leaves experiment-cache fingerprints
+  (``bench/cache.py`` jaxpr hashes) unchanged.
+* **pallas** (``core/locks/pallas_backend.py``) — lowers the same IR to
+  a ``pl.pallas_call`` kernel where each thread is a grid program
+  hammering the lock words through the device atomics layer
+  (``core/runtime/atomics.py``); the *measured* tier of the sim->silicon
+  loop.
+
+Op semantics and result encodings are defined once, in the contract
+table at the top of ``core/sim/machine.py``; :data:`OP_TABLE` exposes
+that contract as data (per-op class and result encoding) so backends
+and tools can branch on op *kind* without re-deriving the taxonomy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.locks.dsl import (
+    CS2_WORD, CS_WORD, Ctx, LockSpec, SpecError, _b, _i,
+)
+from repro.core.sim import machine as M
+from repro.core.sim.machine import DELAY, LOAD, Program, STORE
+
+__all__ = ["LockIR", "OP_TABLE", "OpInfo", "lower_spec", "to_sim_program",
+           "build_spec", "describe_spec"]
+
+
+# --- the op/result-encoding contract, as data --------------------------------
+
+@dataclass(frozen=True)
+class OpInfo:
+    """One row of the machine's op contract table (``core/sim/machine.py``):
+    what the op reads/writes and how its result packs."""
+    name: str
+    kind: int
+    is_load: bool            # reads the addressed word
+    is_store: bool           # writes (takes the line exclusive)
+    is_wait: bool            # may block until the word (dis)satisfies
+    result: str              # result encoding fed to the next handler
+
+
+#: kind -> OpInfo for every machine op. ``old2ok`` packs ``old * 2 + ok``
+#: (CAS and the timed parks); waits deliver the watched value once
+#: satisfied; pure delays deliver the unchanged previous result.
+OP_TABLE = {
+    o.kind: o for o in (
+        OpInfo("NOP", M.NOP, False, False, False, "unchanged"),
+        OpInfo("LOAD", M.LOAD, True, False, False, "value"),
+        OpInfo("STORE", M.STORE, False, True, False, "value"),
+        OpInfo("XCHG", M.XCHG, True, True, False, "old"),
+        OpInfo("CAS", M.CAS, True, True, False, "old2ok"),
+        OpInfo("FAA", M.FAA, True, True, False, "old"),
+        OpInfo("SPIN_EQ", M.SPIN_EQ, True, False, True, "value"),
+        OpInfo("SPIN_NE", M.SPIN_NE, True, False, True, "value"),
+        OpInfo("DELAY", M.DELAY, False, False, False, "unchanged"),
+        OpInfo("PARK_EQ", M.PARK_EQ, True, False, True, "value"),
+        OpInfo("PARK_EQ_TIMEOUT", M.PARK_EQ_TIMEOUT, True, False, True,
+               "old2ok"),
+        OpInfo("PARK_NE_TIMEOUT", M.PARK_NE_TIMEOUT, True, False, True,
+               "old2ok"),
+    )
+}
+
+
+# --- the IR -------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LockIR:
+    """A lowered lock, backend-neutral.
+
+    ``handlers[pc](t, regs, res, rng) -> (regs, next_pc, op4, arrive,
+    admit, rng)`` is the machine calling convention — already resolved
+    (labels -> pcs, registers -> indices, scaffolding injected), pure
+    jnp, traceable under ``lax.switch`` by any backend. The remaining
+    fields are layout and phase metadata:
+
+    * ``n_mem`` / ``home`` / ``init_mem`` — word count, per-word NUMA
+      home thread (-1 => node 0), initial values.
+    * ``labels`` — label -> pc for every declared step (plus ``ncs``).
+    * ``phases`` — pc -> phase tag, including the injected ``"ncs"``
+      (pc 0) and ``"cs"`` (the second-CS handler) scaffolding.
+    * ``release_pc`` / ``cs2_pc`` — where the release phase starts and
+      where ``enter_cs`` routes, for backends that instrument the
+      critical-section window.
+    * ``cs_mode`` / ``ncs_max`` — the workload profile baked into the
+      scaffolding handlers (``rw`` / ``ro`` / ``local``, NCS delay cap).
+    """
+    name: str
+    handlers: tuple
+    n_mem: int
+    home: tuple
+    init_mem: tuple
+    n_threads: int
+    labels: tuple            # ((label, pc), ...) in pc order
+    phases: tuple            # pc -> phase string
+    release_pc: int
+    cs2_pc: int
+    cs_mode: str
+    ncs_max: int
+    n_regs: int = Program.n_regs
+
+    @property
+    def n_handlers(self) -> int:
+        return len(self.handlers)
+
+    def label_of(self, pc: int) -> str:
+        for lab, p in self.labels:
+            if p == pc:
+                return lab
+        return f"pc{pc}"
+
+
+def _xorshift(r):
+    r = r ^ (r << jnp.uint32(13))
+    r = r ^ (r >> jnp.uint32(17))
+    r = r ^ (r << jnp.uint32(5))
+    return r
+
+
+def _cs_mode(cs_shared) -> str:
+    return cs_shared if isinstance(cs_shared, str) else (
+        "rw" if cs_shared else "local")
+
+
+def _cs1_op(cs_shared) -> tuple:
+    # plain ints, not jnp scalars: the emitting handler wraps them at
+    # trace time, so backends (Pallas kernels in particular) never close
+    # over pre-created arrays
+    mode = _cs_mode(cs_shared)
+    if mode in ("rw", "ro"):
+        return (LOAD, CS_WORD, 0, 0)
+    return (DELAY, 0, 1, 0)
+
+
+def _cs2_op(cs_shared, res) -> tuple:
+    mode = _cs_mode(cs_shared)
+    if mode == "rw":
+        return (_i(STORE), _i(CS_WORD), _i(res + 1), _i(0))
+    if mode == "ro":
+        return (_i(LOAD), _i(CS2_WORD), _i(0), _i(0))
+    return (_i(DELAY), _i(0), _i(1), _i(0))
+
+
+def _ncs_handler(next_pc: int, ncs_max: int):
+    def h(t, regs, res, rng):
+        rng = _xorshift(rng)
+        d = _i(rng % jnp.uint32(max(ncs_max, 1))) * (ncs_max > 0)
+        return (regs, _i(next_pc), (_i(DELAY), _i(0), d, _i(0)),
+                _b(False), _b(False), rng)
+    return h
+
+
+def build_spec(author: Callable, n_threads: int,
+               name: str | None = None) -> LockSpec:
+    """Run the author function; return the populated, validated builder."""
+    spec = LockSpec(name or author.__name__, n_threads)
+    author(spec)
+    spec.validate()
+    return spec
+
+
+def describe_spec(author: Callable, n_threads: int = 2) -> dict:
+    """Introspect a spec without lowering it: phase -> step labels, plus
+    the memory layout (for ``python -m repro.bench list --programs``)."""
+    spec = build_spec(author, n_threads)
+    return {
+        "name": spec.name,
+        "phases": spec.phase_summary(),
+        "n_steps": len(spec.steps),
+        "regs": sorted(spec.regmap, key=spec.regmap.get),
+        "words": dict(spec.words),
+        "regions": [(r.name, r.size, "per-thread" if r.homed else "global")
+                    for r in spec.regions],
+    }
+
+
+def lower_spec(author: Callable, n_threads: int, *, ncs_max: int = 0,
+               cs_shared=True, name: str | None = None) -> LockIR:
+    """Lower ``author``'s spec to the backend-neutral :class:`LockIR`.
+
+    This is the whole backend-independent compile: phase flattening,
+    label/register resolution, scaffolding injection, the eager
+    per-handler abstract trace (unknown labels/registers and untraceable
+    steps are *compile-time* ``SpecError``s), and the structural
+    ``cfg.py`` verification gate.
+    """
+    spec = build_spec(author, n_threads, name)
+    T = n_threads
+
+    # pc layout: 0 = injected NCS; 1..N = declared steps; N+1 = injected
+    # second-CS handler. NCS label -> 0 closes the episode loop.
+    labels = {"ncs": 0}
+    for i, st in enumerate(spec.steps):
+        labels[st.label] = 1 + i
+    cs2_pc = 1 + len(spec.steps)
+    release_pc = next(labels[st.label] for st in spec.steps
+                      if st.phase == "release")
+    cs1 = _cs1_op(cs_shared)
+
+    def make_handler(idx: int):
+        st = spec.steps[idx]
+        fallthrough = 2 + idx if idx + 1 < len(spec.steps) else None
+
+        def h(t, regs, res, rng):
+            c = Ctx(t=t, T=T, res=res, regs=regs, rng=rng,
+                    regmap=spec.regmap, labels=labels,
+                    fallthrough=fallthrough, cs1_op=cs1, cs2_pc=cs2_pc)
+            try:
+                out = st.fn(c)
+            except SpecError as e:
+                raise SpecError(f"{spec.name}.{st.label}: {e}") from e
+            if out is None:
+                raise SpecError(f"{spec.name}.{st.label}: step returned "
+                                "None (must return c.op/c.when/c.enter_cs)")
+            op = tuple(_i(x) for x in out.op)
+            return (c.r._arr, _i(out.pc), op,
+                    _b(out.arrive), _b(out.admit), rng)
+        return h
+
+    def cs2_handler(t, regs, res, rng):
+        return (regs, _i(release_pc), _cs2_op(cs_shared, res),
+                _b(False), _b(False), rng)
+
+    handlers = tuple([_ncs_handler(1, ncs_max)]
+                     + [make_handler(i) for i in range(len(spec.steps))]
+                     + [cs2_handler])
+    # Eager abstract trace of every handler: unknown labels/registers,
+    # steps returning None, and bad fallthroughs are *compile-time*
+    # errors, not mid-sweep tracer failures.
+    probe = (jnp.int32(0), jnp.zeros((Program.n_regs,), jnp.int32),
+             jnp.int32(0), jnp.uint32(1))
+    for st, h in zip(spec.steps, handlers[1:]):
+        try:
+            jax.eval_shape(h, *probe)
+        except SpecError:
+            raise
+        except Exception as e:
+            raise SpecError(
+                f"{spec.name}.{st.label}: step failed to trace: {e}") from e
+    # Cheap structural verification (core/locks/cfg.py): loop-free
+    # doorway/release by default, plus two-sided checks of any
+    # s.expect(...) declarations. Violations are SpecErrors with
+    # phase/label provenance; a spec body the recorder cannot replay
+    # (exotic jnp use) degrades to unverified rather than failing the
+    # compile — the `repro.bench verify` CLI reports it as such.
+    from repro.core.locks import cfg as _cfg
+    try:
+        facts = _cfg.analyze(spec)
+    except SpecError:
+        raise
+    except Exception:
+        facts = None
+    if facts is not None:
+        violations = _cfg.check_spec(facts)
+        if violations:
+            raise SpecError(f"{spec.name}: {violations[0]}")
+    phases = tuple(["ncs"] + [st.phase for st in spec.steps] + ["cs"])
+    return LockIR(
+        name=spec.name, handlers=handlers, n_mem=spec.n_mem,
+        home=spec.home(), init_mem=tuple(spec.inits), n_threads=T,
+        labels=tuple(sorted(labels.items(), key=lambda kv: kv[1])),
+        phases=phases, release_pc=release_pc, cs2_pc=cs2_pc,
+        cs_mode=_cs_mode(cs_shared), ncs_max=ncs_max)
+
+
+def to_sim_program(ir: LockIR) -> Program:
+    """Backend #1: wrap the IR for the discrete-time sim machine. The
+    handler tuple is passed through untouched — sim lowering through the
+    IR is bit-identical to the historical one-shot compiler."""
+    return Program(handlers=ir.handlers, n_mem=ir.n_mem, home=ir.home,
+                   name=ir.name, init_mem=ir.init_mem)

@@ -1,0 +1,373 @@
+"""Backend #2: lower a ``LockIR`` to a Pallas kernel — the *measured* tier.
+
+Where the sim backend (``ir.to_sim_program`` + ``core/sim/machine.py``)
+*models* time — every micro-op is priced by a ``CostModel`` and the bus
+serializes line transfers — this backend *spends* it: the same IR
+handler table runs as a ``pl.pallas_call`` kernel in which each thread
+is a grid program hammering the lock words through the device atomics
+layer (``core/runtime/atomics.py``), and throughput is wall-clock
+episodes per second.
+
+Execution model
+---------------
+The kernel runs on a ``grid = (rounds, T)``: grid iteration is
+row-major, so one *round* gives every thread one micro-op slice in
+thread order — a deterministic round-robin schedule at op granularity
+(the schedule the backend-agreement differential in
+``tests/test_ir_backends.py`` replays through the sim machine with a
+uniform cost model). A slice is exactly one turn of the machine's
+op/handler crank:
+
+1. execute the thread's pending op against shared memory via the
+   ``Atomics`` layer (one generic read-modify-write per the
+   ``ir.OP_TABLE`` contract),
+2. unsatisfied waits (SPIN/PARK) retry next round — no transition;
+   timed parks burn a probe budget and complete with ``ok == 0``,
+3. otherwise dispatch the per-pc handler (``lax.switch`` over the IR's
+   handler closures — the same closures the sim runs) and commit the
+   transition: registers, next pc, next op, rng.
+
+Lock state, per-thread machine state, and the metrics (episodes,
+admission ring, arrive/admit latency in slices, the mutual-exclusion
+guard/collision counter) all live in aliased output refs, so state
+persists across the whole grid and the kernel is a single device
+launch.
+
+Modes
+-----
+``interpret=True`` (default on CPU) runs the identical kernel through
+the Pallas interpreter — grid programs execute sequentially, so the
+emulated read-modify-writes are linearizable and CI can run the
+measured tier everywhere. On a real accelerator the atomics layer
+switches to ``pl.atomic_*`` / guard-lock splices. ``backends()``
+probes what this process can actually run (the ``repro.bench list
+--backends`` catalogue).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+from repro.core.locks.ir import LockIR, lower_spec
+from repro.core.runtime.atomics import PallasAtomics
+from repro.core.sim import machine as M
+
+__all__ = ["MeasuredResult", "run_measured", "backends", "resolve_ir",
+           "ADM_LOG_M", "GUARD_WORD"]
+
+#: admission-ring capacity (slot ADM_LOG_M is the overflow spill slot)
+ADM_LOG_M = 256
+#: reserved word for the device-mode atomics guard: every spec's layout
+#: keeps words 6..7 unused (lock words 0..3, CS words 4..5, arrays >= 8)
+GUARD_WORD = 6
+
+
+@dataclass
+class MeasuredResult:
+    """One measured run: paper metrics in wall-clock/slice units."""
+    name: str
+    n_threads: int
+    rounds: int
+    backend: str                 # "pallas-interpret" | "pallas-device"
+    episodes: int                # total CS admissions
+    per_thread: np.ndarray       # (T,) episodes per thread
+    collisions: int              # ME violations observed (must be 0)
+    admissions: np.ndarray       # (ADM_LOG_M,) ring of admitted tids
+    admission_counts: int        # total admissions (ring position)
+    returns: int                 # NCS returns (returns - episodes = aborts)
+    wall_s: float                # wall time of the warm timed launch
+    compile_s: float             # first-launch (trace+compile) time
+
+    @property
+    def slices(self) -> int:
+        return self.rounds * self.n_threads
+
+    @property
+    def throughput_eps(self) -> float:
+        """Episodes per wall-second — the measured analogue of the sim's
+        episodes-per-kilocycle."""
+        return self.episodes / max(self.wall_s, 1e-9)
+
+    @property
+    def episodes_per_kslice(self) -> float:
+        """Wall-free progress rate: episodes per 1000 op slices (the
+        schedule-normalized number the calibration layer fits)."""
+        return self.episodes * 1e3 / max(self.slices, 1)
+
+    @property
+    def latency_slices(self) -> float:
+        return self._lat_sum / max(self.episodes, 1)
+
+    _lat_sum: int = 0
+    aborts: int = 0
+
+
+def resolve_ir(lock, n_threads: int, *, ncs_max: int = 0,
+               cs_shared=True) -> LockIR:
+    """Accept a registered lock name, a spec author function, or an
+    already-lowered ``LockIR``."""
+    if isinstance(lock, LockIR):
+        return lock
+    if isinstance(lock, str):
+        from repro.core.locks.specs import SPECS
+        return lower_spec(SPECS[lock], n_threads, ncs_max=ncs_max,
+                          cs_shared=cs_shared, name=lock)
+    return lower_spec(lock, n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
+
+
+# --- kernel -------------------------------------------------------------------
+
+def _build_kernel(ir: LockIR, n_threads: int, atomics: PallasAtomics):
+    """The per-slice kernel body. All state flows through the aliased
+    output refs; the input refs only seed them."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    T = n_threads
+    R = ir.n_regs
+    handlers = ir.handlers
+    i32 = jnp.int32
+
+    def kernel(*refs):
+        # inputs [0:13] alias outputs [13:26]; operate on the outputs
+        (mem, pc, regs, cur_op, rng, tmo, episodes, returns,
+         arrive_slice, lat_sum, held, scalars, adm_log) = refs[13:]
+        r_idx = pl.program_id(0)
+        t = pl.program_id(1).astype(i32)
+        slice_idx = r_idx.astype(i32) * T + t
+
+        kind, addr = cur_op[t, i32(0)], cur_op[t, i32(1)]
+        a, b = cur_op[t, i32(2)], cur_op[t, i32(3)]
+
+        # -- op classes (ir.OP_TABLE as traced masks) -----------------------
+        is_park_to = ((kind == M.PARK_EQ_TIMEOUT)
+                      | (kind == M.PARK_NE_TIMEOUT))
+        eq_wait = ((kind == M.SPIN_EQ) | (kind == M.PARK_EQ)
+                   | (kind == M.PARK_EQ_TIMEOUT))
+        ne_wait = (kind == M.SPIN_NE) | (kind == M.PARK_NE_TIMEOUT)
+
+        # -- wait check + timed-park probe budget ---------------------------
+        watched = atomics.load(mem, addr)
+        unsat = (eq_wait & (watched != a)) | (ne_wait & (watched == a))
+        budget = tmo[t]
+        armed = budget >= 0
+        timed_out = is_park_to & unsat & armed & (budget <= 0)
+        spin_unsat = unsat & ~timed_out
+        do_exec = ~spin_unsat
+        # timeouts are probe-denominated on this backend: the op's
+        # timeout operand counts unsatisfied rounds, not sim cycles
+        tmo[t] = jnp.where(do_exec, i32(-1),
+                           jnp.where(is_park_to,
+                                     jnp.where(armed, budget - 1, b),
+                                     budget))
+
+        # -- memory effect: one atomic RMW per the contract table ----------
+        # (waits/loads/delays write the old value back — a no-op by value;
+        # device mode serializes the window through the atomics guard)
+        eff_kind = jnp.where(do_exec, kind, i32(M.NOP))
+        old = atomics.rmw(mem, addr, eff_kind, a, b)
+
+        # -- result encoding ------------------------------------------------
+        cas_ok = (kind == M.CAS) & (old == a)
+        res = jnp.where(kind == M.CAS, old * 2 + cas_ok.astype(i32),
+                        jnp.where(is_park_to,
+                                  old * 2 + jnp.where(timed_out, 0, 1),
+                                  old))
+
+        # -- DELAY burns real slices-worth of work --------------------------
+        iters = jnp.where(do_exec & (kind == M.DELAY), a, 0)
+        burn = jax.lax.fori_loop(0, iters, lambda i, x: x + i, 0)
+        scalars[i32(3)] = scalars[i32(3)] + burn
+
+        # -- transition: dispatch the IR handler at pc ----------------------
+        pc_t = pc[t]
+        regs_t = jnp.stack([regs[t, i32(i)] for i in range(R)])
+        outs = jax.lax.switch(pc_t, [partial(h, t) for h in handlers],
+                              regs_t, res, rng[t])
+        regs_new, next_pc, next_op, arrive, admit, rng_new = outs
+
+        pc[t] = jnp.where(do_exec, next_pc, pc_t)
+        rng[t] = jnp.where(do_exec, rng_new, rng[t])
+        for i in range(R):
+            regs[t, i32(i)] = jnp.where(do_exec, regs_new[i],
+                                        regs[t, i32(i)])
+        for i in range(4):
+            op_i = jnp.asarray(next_op[i], i32)
+            cur_op[t, i32(i)] = jnp.where(do_exec, op_i, cur_op[t, i32(i)])
+
+        # -- metrics --------------------------------------------------------
+        arrive_eff = do_exec & arrive
+        admit_eff = do_exec & admit
+        ret = do_exec & (next_pc == 0) & (pc_t != 0)
+
+        arrive_slice[t] = jnp.where(arrive_eff, slice_idx, arrive_slice[t])
+        lat_sum[t] = lat_sum[t] + jnp.where(
+            admit_eff, slice_idx - arrive_slice[t], 0)
+        episodes[t] = episodes[t] + admit_eff.astype(i32)
+        returns[t] = returns[t] + ret.astype(i32)
+
+        # admission ring with a spill slot at ADM_LOG_M: non-admissions
+        # and overflow both land in the spill, real entries in 0..K-1
+        cnt = scalars[i32(0)]
+        pos = jnp.where(admit_eff, jnp.minimum(cnt, ADM_LOG_M),
+                        i32(ADM_LOG_M))
+        adm_log[pos] = jnp.where(admit_eff, t, adm_log[pos])
+        scalars[i32(0)] = cnt + admit_eff.astype(i32)
+
+        # mutual-exclusion guard: admitted while someone else holds the
+        # admit..NCS-return window => collision (must never happen)
+        g = scalars[i32(1)]
+        scalars[i32(2)] = scalars[i32(2)] + jnp.where(
+            admit_eff & (g != 0), 1, 0)
+        dec = (ret & (held[t] != 0)).astype(i32)
+        scalars[i32(1)] = g + admit_eff.astype(i32) - dec
+        held[t] = jnp.where(admit_eff, i32(1),
+                            jnp.where(ret, i32(0), held[t]))
+
+    return kernel
+
+
+def _initial_buffers(ir: LockIR, n_threads: int, seed: int):
+    import jax.numpy as jnp
+    T, R = n_threads, ir.n_regs
+    mem0 = jnp.zeros(max(ir.n_mem, GUARD_WORD + 1), jnp.int32)
+    for a, v in ir.init_mem:
+        mem0 = mem0.at[a].set(v)
+    rng0 = (jnp.arange(T, dtype=jnp.uint32) * jnp.uint32(2654435761)
+            + jnp.uint32(seed) * jnp.uint32(97) + jnp.uint32(1))
+    nop = jnp.broadcast_to(jnp.array([M.NOP, 0, 0, 0], jnp.int32), (T, 4))
+    return (
+        mem0,                                         # mem
+        jnp.zeros(T, jnp.int32),                      # pc
+        jnp.zeros((T, R), jnp.int32),                 # regs
+        nop,                                          # cur_op
+        rng0,                                         # rng
+        jnp.full(T, -1, jnp.int32),                   # tmo
+        jnp.zeros(T, jnp.int32),                      # episodes
+        jnp.zeros(T, jnp.int32),                      # returns
+        jnp.zeros(T, jnp.int32),                      # arrive_slice
+        jnp.zeros(T, jnp.int32),                      # lat_sum
+        jnp.zeros(T, jnp.int32),                      # held
+        jnp.zeros(4, jnp.int32),     # scalars: adm_cnt, guard, coll, burn
+        jnp.full(ADM_LOG_M + 1, -1, jnp.int32),       # adm_log (+spill)
+    )
+
+
+def run_measured(lock, n_threads: int, rounds: int, *, ncs_max: int = 0,
+                 cs_shared=True, seed: int = 0,
+                 interpret: bool | None = None) -> MeasuredResult:
+    """Run ``lock`` on the Pallas backend for ``rounds`` round-robin
+    rounds of one micro-op per thread. ``interpret=None`` auto-selects:
+    interpret mode on CPU (the everywhere-runnable fallback), compiled
+    device kernels when an accelerator is present."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    ir = resolve_ir(lock, n_threads, ncs_max=ncs_max, cs_shared=cs_shared)
+    atomics = PallasAtomics(interpret=interpret, guard_idx=GUARD_WORD)
+    kernel = _build_kernel(ir, n_threads, atomics)
+    inits = _initial_buffers(ir, n_threads, seed)
+    out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in inits]
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(rounds, n_threads),
+        out_shape=out_shape,
+        input_output_aliases={i: i for i in range(len(inits))},
+        interpret=interpret,
+    )
+    fn = jax.jit(call)
+    t0 = time.time()
+    jax.block_until_ready(fn(*inits))          # trace + compile + warm
+    compile_s = time.time() - t0
+    t0 = time.time()
+    outs = jax.block_until_ready(fn(*inits))   # the timed launch
+    wall = time.time() - t0
+
+    (_mem, _pc, _regs, _op, _rng, _tmo, episodes, returns, _arr, lat_sum,
+     _held, scalars, adm_log) = (np.asarray(o) for o in outs)
+    eps = int(episodes.sum())
+    rets = int(returns.sum())
+    r = MeasuredResult(
+        name=ir.name, n_threads=n_threads, rounds=rounds,
+        backend="pallas-interpret" if interpret else "pallas-device",
+        episodes=eps, per_thread=episodes, collisions=int(scalars[2]),
+        admissions=adm_log[:ADM_LOG_M],
+        admission_counts=int(scalars[0]), returns=rets,
+        wall_s=wall, compile_s=compile_s)
+    r._lat_sum = int(lat_sum.sum())
+    r.aborts = max(rets - eps, 0)
+    return r
+
+
+# --- backend catalogue --------------------------------------------------------
+
+def _probe_pallas(interpret: bool) -> tuple[bool, str]:
+    """Can this process run a minimal aliased-state Pallas kernel (with
+    the atomics layer) in the given mode?"""
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        atomics = PallasAtomics(interpret=interpret, guard_idx=0)
+
+        def k(x_ref, o_ref):
+            old = atomics.fetch_add(o_ref, jnp.int32(1), jnp.int32(2))
+            o_ref[jnp.int32(0)] = old
+
+        out = pl.pallas_call(
+            k, grid=(2,),
+            out_shape=jax.ShapeDtypeStruct((2,), jnp.int32),
+            input_output_aliases={0: 0},
+            interpret=interpret,
+        )(jnp.array([5, 7], jnp.int32))
+        ok = int(np.asarray(out)[1]) == 11
+        return ok, "ok" if ok else f"probe mismatch: {np.asarray(out)}"
+    except Exception as e:                      # noqa: BLE001
+        return False, f"{type(e).__name__}: {e}"[:120]
+
+
+def backends() -> list:
+    """The backend catalogue with availability probing — what
+    ``repro.bench list --backends`` prints. Rows:
+    ``{"name", "available", "detail"}``."""
+    import jax
+    rows = [{
+        "name": "sim",
+        "available": True,
+        "detail": "discrete-time coherence interpreter "
+                  "(core/sim/machine.py handler tables under lax.scan)",
+    }]
+    ok, detail = _probe_pallas(interpret=True)
+    rows.append({
+        "name": "pallas-interpret",
+        "available": ok,
+        "detail": ("Pallas kernel, interpreter mode (CPU fallback; "
+                   "sequential grid => emulated RMWs are linearizable)"
+                   if ok else detail),
+    })
+    plat = jax.default_backend()
+    if plat == "cpu":
+        rows.append({
+            "name": "pallas-device",
+            "available": False,
+            "detail": f"no accelerator (jax backend: {plat})",
+        })
+    else:
+        ok, detail = _probe_pallas(interpret=False)
+        rows.append({
+            "name": "pallas-device",
+            "available": ok,
+            "detail": (f"compiled Pallas kernel on {plat} "
+                       "(pl.atomic_* + guard-lock splices)"
+                       if ok else detail),
+        })
+    return rows

@@ -16,12 +16,18 @@ primitives; ``Event`` is CPython's analogue). One singleton element per
 thread in TLS suffices (a thread waits on at most one lock at a time), and
 the element is reusable across any number of locks — the paper's
 space-complexity point.
+
+Atomic primitives come through the unified ``Atomics`` protocol
+(``core/runtime/atomics.py``) — the same interface the measured Pallas
+backend implements in-kernel — so the lock body is substrate-agnostic:
+it allocates its one ``Arrivals`` word from whatever implementation is
+injected (default: the process-wide host implementation).
 """
 from __future__ import annotations
 
 import threading
 
-from repro.core.runtime.atomics import AtomicRef
+from repro.core.runtime.atomics import Atomics, host_atomics
 
 _LOCKEDEMPTY = "LOCKEDEMPTY"           # the paper's tagged-1 encoding
 _tls = threading.local()
@@ -58,8 +64,8 @@ class ReciprocatingLock:
     """Context-manager mutex. Context (succ, eos) is kept per-thread
     (legacy-interface style — the paper's TLS option)."""
 
-    def __init__(self):
-        self._arrivals = AtomicRef(None)
+    def __init__(self, atomics: Atomics | None = None):
+        self._arrivals = (atomics or host_atomics()).ref(None)
         self._ctx = threading.local()
 
     # -- Acquire (Listing 1 L14-47) ----------------------------------------

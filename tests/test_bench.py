@@ -143,6 +143,66 @@ def test_cli_list_topologies(capsys):
         assert name in out
 
 
+def test_cli_list_backends(capsys):
+    assert cli_main(["list", "--backends"]) == 0
+    out = capsys.readouterr().out
+    assert "# execution backends" in out and "# suites" not in out
+    for name in ("sim", "pallas-interpret", "pallas-device"):
+        assert name in out
+    # CPU CI: the interpret fallback must probe as available
+    assert "pallas-interpret  available" in out
+
+
+def test_measured_suite_tiny():
+    cfg = BenchConfig(threads=(2, 3), n_steps=250, n_replicas=1,
+                      verbose=False, quick=True,
+                      algs=("reciprocating", "ticket"))
+    doc = run_suite("measured", cfg)
+    assert validate_result(doc) == []
+    by = {e["name"]: e for e in doc["experiments"]}
+    backs = {r["name"] for r in by["measured_backends"]["rows"]}
+    assert backs == {"sim", "pallas-interpret", "pallas-device"}
+    series = {s["label"]: s for s in by["measured_fig1a"]["series"]}
+    assert set(series) == {"reciprocating", "ticket"}
+    for s in series.values():
+        for p in s["points"]:
+            assert p["collisions"] == 0
+            assert p["episodes"] > 0
+    # the agreement gate: both order and CS counts, zero ME violations
+    for r in by["measured_agreement"]["rows"]:
+        assert r["order_match"] and r["cs_counts_match"], r
+        assert r["collisions"] == 0
+    fit = by["measured_calibration_fit"]["values"]
+    assert fit["scale_kslice_per_kcycle"] > 0
+    assert by["measured_calibration"]["rows"]
+    assert "measured" in render_markdown(doc)
+
+
+def test_measured_cells_cache_under_measured_kind():
+    """Measured cells are content-addressed under a distinct key kind:
+    a second identical call replays from the store, and the key never
+    collides with a sim cell of the same program."""
+    from repro.bench import cache as cachemod
+    from repro.bench.measured import _measured_key, measured_cell
+    from repro.core.locks.pallas_backend import resolve_ir
+    from repro.core.sim.engine import Workload
+
+    store = cachemod.get_cache()
+    if not store.enabled:
+        pytest.skip("experiment cache disabled")
+    c1 = measured_cell("ticket", 2, 64, seed=11)
+    s0 = store.stats.snapshot()
+    c2 = measured_cell("ticket", 2, 64, seed=11)
+    s1 = store.stats.snapshot()
+    assert c2 == c1
+    assert s1["hits"] == s0["hits"] + 1
+    ir = resolve_ir("ticket", 2)
+    key = _measured_key(ir, 2, 64, 11, True)
+    fp = cachemod.program_fingerprint(ir)
+    assert key != cachemod.cell_key(fp, 2, Workload(0, True, 64),
+                                    [], [], [11])
+
+
 def test_bypass_bounds_match_paper():
     bins, series, stats = sweep.bypass_histograms(
         ("fifo", "lifo", "reciprocating"), n_threads=6, n_events=600)
